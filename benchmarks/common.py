@@ -1,0 +1,87 @@
+"""Shared benchmark scaffolding: the demo model, data, CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim, training
+from repro.configs import get_config
+from repro.core import importance as imp
+from repro.data import SyntheticLM
+from repro.dist.axes import NO_AXES
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def demo_cfg(fast: bool = True):
+    cfg = get_config("limpq-demo")
+    if fast:
+        cfg = cfg.scaled(n_layers=3, d_model=128, n_heads=4, n_kv_heads=2,
+                         d_ff=512, vocab=512)
+    return cfg
+
+
+def demo_setup(fast: bool = True, seed: int = 0, n_batches: int = 24,
+               batch: int = 4, seq: int = 64):
+    cfg = demo_cfg(fast)
+    rng = jax.random.PRNGKey(seed)
+    params = lm.init_params(rng, cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    data = SyntheticLM(cfg)
+    batches = [{k: jnp.asarray(v) for k, v in data.batch(s, batch, seq).items()}
+               for s in range(n_batches)]
+    return cfg, params, ctx, batches
+
+
+def finetune_and_eval(cfg, params, ctx, bits, train_batches, eval_batches,
+                      lr=3e-3, label=""):
+    opt = optim.adamw(lr, clip_norm=1.0)
+    step = jax.jit(training.make_train_step(cfg, ctx, opt, bits, NO_AXES,
+                                            remat=False))
+    p, s = params, opt.init(params)
+    for b in train_batches:
+        p, s, _ = step(p, s, b)
+    ev = training.evaluate(p, cfg, ctx, bits, eval_batches)
+    return ev["ce"], p
+
+
+def eval_no_finetune(cfg, params, ctx, bits, eval_batches):
+    """Immediate CE under a policy — at micro scale the finetune can wash
+    out policy differences; the direct quantization-noise CE is the
+    cleaner ordering signal."""
+    return training.evaluate(params, cfg, ctx, bits, eval_batches)["ce"]
+
+
+def write_csv(name: str, rows: List[Dict]):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    if not rows:
+        return path
+    fields: List[str] = []
+    for r in rows:                      # union, first-seen order
+        for k in r:
+            if k not in fields:
+                fields.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    print(f"  -> {path}")
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,81 @@
+"""Paper Fig. 1 analog: do learned quantizer scales rank layer sensitivity?
+
+The paper contrasts DW-convs (few params, sensitive) vs PW-convs (many,
+insensitive) in MobileNet. The LM analog: narrow attention projections vs
+wide MLP matmuls. Protocol (paper §3.3.1, adapted):
+
+  1. ground-truth sensitivity: quantize ONE projection group at a time to
+     2 bits vs 4 bits (others fp), finetune briefly, record the CE
+     degradation gap CE(2b) - CE(4b);
+  2. learned indicators: one joint training run (§3.4);
+  3. report the rank correlation between indicator value s(2b) and the
+     ground-truth sensitivity gap.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks import common
+from repro.core import importance as imp
+from repro.core.policy import MPQPolicy
+from repro.models import lm
+
+
+def run(fast: bool = True):
+    cfg, params, ctx, batches = common.demo_setup(fast)
+    ql = lm.enumerate_qlayers(cfg)
+    train_b, eval_b = batches[:10], batches[20:]
+
+    # --- 1) ground truth: per-group one-at-a-time quantization -------------
+    FP_BITS = 8  # stand-in "unquantized" level within the bank (6 bits max)
+    rows = []
+    gt_gap = {}
+    for q in ql:
+        gaps = {}
+        for b in (2, 4):
+            w_bits = {qq.name: 6 for qq in ql}
+            a_bits = {qq.name: 6 for qq in ql}
+            w_bits[q.name] = b
+            a_bits[q.name] = b
+            policy = MPQPolicy(w_bits, a_bits)
+            bits = lm.bits_from_policy(cfg, policy, ql)
+            ce, _ = common.finetune_and_eval(cfg, params, ctx, bits,
+                                             train_b[:6], eval_b)
+            gaps[b] = ce
+        gt_gap[q.name] = gaps[2] - gaps[4]
+        rows.append({"layer": q.name, "kind": q.kind,
+                     "ce_2b": round(gaps[2], 4), "ce_4b": round(gaps[4], 4),
+                     "sensitivity_gap": round(gt_gap[q.name], 4)})
+
+    # --- 2) learned indicators ----------------------------------------------
+    params2, _ = imp.train_importance(params, cfg, ctx, train_b, lr=0.02)
+    ind = imp.extract_indicators(params2, cfg, ql)
+    for r in rows:
+        r["indicator_w_2b"] = round(float(ind[r["layer"]]["w"][0]), 5)
+        r["indicator_a_2b"] = round(float(ind[r["layer"]]["a"][0]), 5)
+
+    # --- 3) rank correlation -------------------------------------------------
+    names = [q.name for q in ql]
+    gt = np.asarray([gt_gap[n] for n in names])
+    s2 = np.asarray([ind[n]["w"][0] + ind[n]["a"][0] for n in names])
+
+    def spearman(a, b):
+        ra = np.argsort(np.argsort(a)).astype(float)
+        rb = np.argsort(np.argsort(b)).astype(float)
+        ra -= ra.mean(); rb -= rb.mean()
+        return float((ra * rb).sum() /
+                     (np.sqrt((ra ** 2).sum() * (rb ** 2).sum()) + 1e-12))
+
+    rho = spearman(gt, s2)
+    print(f"feasibility: spearman(indicator, sensitivity) = {rho:.3f}  "
+          f"(n={len(names)})")
+    rows.append({"layer": "SPEARMAN", "kind": "-", "ce_2b": "", "ce_4b": "",
+                 "sensitivity_gap": round(rho, 4), "indicator_w_2b": "",
+                 "indicator_a_2b": ""})
+    common.write_csv("feasibility.csv", rows)
+    return {"spearman": rho}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Criterion-comparison (paper Table 1/3): learned indicators vs the
+HAWQ-style Hessian-trace criterion under identical search + finetune.
+
+The paper's argument: Hessian criteria are computed on the full-precision
+net (quantization-blind) and rank only weights; ours is quantization-aware
+and covers activations. Both criteria run through the SAME MCKP solver.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import hessian
+from repro.core import importance as imp
+from repro.core import search
+from repro.models import lm
+
+import jax
+
+
+def run(fast: bool = True):
+    cfg, params, ctx, batches = common.demo_setup(fast, n_batches=30)
+    ql = lm.enumerate_qlayers(cfg)
+    train_b, eval_b = batches[:12], batches[24:]
+
+    with common.Timer() as t_ours:
+        params_i, _ = imp.train_importance(params, cfg, ctx, train_b[:8],
+                                           lr=0.02)
+        ind = imp.extract_indicators(params_i, cfg, ql)
+    with common.Timer() as t_hawq:
+        hawq = hessian.hawq_sensitivities(params, cfg, train_b[0],
+                                          jax.random.PRNGKey(7),
+                                          qlayers=ql, n_samples=4)
+
+    budget = search.bitops_budget_for_uniform(ql, 3)
+    rows = []
+    for label, table, alpha, src_params in (
+            ("ours", ind, 1.0, params_i),
+            ("hawq-proxy", hawq, 1.0, params)):
+        res = search.search_policy(ql, table, cfg.bits, alpha=alpha,
+                                   bitops_budget=budget)
+        bits = lm.bits_from_policy(cfg, res.policy, ql)
+        ce, _ = common.finetune_and_eval(cfg, src_params, ctx, bits,
+                                         train_b, eval_b)
+        rows.append({"criterion": label, "ce": round(ce, 4),
+                     "avg_w": round(res.policy.avg_bits()[0], 2),
+                     "avg_a": round(res.policy.avg_bits()[1], 2),
+                     "criterion_time_s": round(
+                         t_ours.dt if label == "ours" else t_hawq.dt, 1)})
+        print(f"hessian_baseline {label}: ce={ce:.4f} "
+              f"avg={rows[-1]['avg_w']}w/{rows[-1]['avg_a']}a "
+              f"(criterion cost {rows[-1]['criterion_time_s']}s)")
+    common.write_csv("hessian_baseline.csv", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline markdown tables from
+the dry-run artifacts. Run after the sweeps:
+
+  PYTHONPATH=src python -m benchmarks.make_report > experiments/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        d = json.load(open(p))
+        key = (d["arch"], d["shape"], d["mesh"],
+               d.get("step_kind", ""))
+        out[key] = d
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_row(d, opt=None):
+    r = d["roofline"]
+    m = d["memory"]
+    h = d["hlo_analysis"]
+    dom = r["dominant"]
+    cells = [
+        d["arch"], d["shape"], d["mesh"],
+        f"{r['compute_s']*1e3:.1f}", f"{r['memory_s']*1e3:.1f}",
+        f"{r['collective_s']*1e3:.1f}", f"**{dom}**",
+        f"{r['model_flops_total']:.2e}", f"{r['useful_ratio']:.2f}",
+        f"{r['mfu_at_roofline']:.4f}", fmt_bytes(m["temp_bytes"]),
+        f"{h['n_collectives']}",
+    ]
+    return "| " + " | ".join(str(c) for c in cells) + " |"
+
+
+def main():
+    base = load("experiments/dryrun_baseline") or load("experiments/dryrun")
+    print("## Generated roofline tables\n")
+    for mesh, label in (("16x16", "single-pod 256 chips"),
+                        ("2x16x16", "multi-pod 512 chips")):
+        rows = [d for k, d in sorted(base.items())
+                if k[2] == mesh and d.get("status") == "ok"]
+        if not rows:
+            continue
+        print(f"### {label} ({mesh})\n")
+        print("| arch | shape | mesh | comp ms | mem ms | coll ms | dominant"
+              " | MODEL_FLOPS | useful | MFU@roof | temp GiB | #coll |")
+        print("|" + "---|" * 12)
+        for d in rows:
+            print(roofline_row(d))
+        print()
+    skips = [d for d in base.values() if d.get("status") == "skipped"]
+    if skips:
+        print("### Skipped cells (documented rules)\n")
+        for d in sorted(skips, key=lambda x: (x["arch"], x["shape"])):
+            print(f"- `{d['arch']}` x `{d['shape']}`: {d['reason']}")
+        print()
+
+    opt = load("experiments/dryrun_opt")
+    if opt:
+        print("### Optimized (beyond-paper) cells vs baseline\n")
+        print("| arch | shape | term | baseline | optimized | delta |")
+        print("|" + "---|" * 6)
+        for k, o in sorted(opt.items()):
+            if o.get("status") != "ok":
+                continue
+            b = base.get(k)
+            if not b or b.get("status") != "ok":
+                continue
+            for term in ("compute_s", "memory_s", "collective_s"):
+                bv = b["roofline"][term] * 1e3
+                ov = o["roofline"][term] * 1e3
+                delta = (ov - bv) / bv * 100 if bv else 0.0
+                print(f"| {k[0]} | {k[1]} | {term[:-2]} | {bv:.1f} ms | "
+                      f"{ov:.1f} ms | {delta:+.1f}% |")
+            bt = b["memory"]["temp_bytes"] / 2**30
+            ot = o["memory"]["temp_bytes"] / 2**30
+            print(f"| {k[0]} | {k[1]} | temp | {bt:.1f} GiB | {ot:.1f} GiB |"
+                  f" {(ot-bt)/bt*100 if bt else 0:+.1f}% |")
+
+
+if __name__ == "__main__":
+    main()

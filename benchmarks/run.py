@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7).
+
+  feasibility        Fig. 1/2   indicator-vs-sensitivity rank correlation
+  joint_training     §3.4/Fig.3 one-shot indicator training + freeze check
+  search_bitops      Table 2/4  BitOps-constrained MPQ (2.5/3/4-bit levels)
+  search_size        Table 3/5  compression-rate + dual constraints
+  ablation_reverse   Table 6    reversed-assignment ablation
+  search_efficiency  §4.3       ILP time on all 10 real arch tables
+  hessian_baseline   Table 1/3  HAWQ-proxy criterion comparison
+  kernel_report      —          Pallas kernels: correctness + VMEM budgets
+  roofline_report    —          aggregates experiments/dryrun artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
+"""
+import argparse
+import time
+import traceback
+
+MODULES = ["kernel_report", "search_efficiency", "joint_training",
+           "ablation_reverse", "search_bitops", "search_size",
+           "hessian_baseline", "feasibility", "roofline_report"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size demo model (slower)")
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    results, failures = {}, []
+    for name in mods:
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            results[name] = mod.run(fast=not args.full)
+            print(f"=== {name} done in {time.time()-t0:.1f}s ===", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\nbenchmarks complete: {len(results)} ok, {len(failures)} failed "
+          f"{failures if failures else ''}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper §4.3: MPQ policy search efficiency.
+
+Part 1 (indicator training) is a once-off QAT-speed cost — measured here
+per step. Part 2 (the ILP) must stay sub-second even for the biggest
+assigned arch: we time solve_dp/solve_lagrangian on the REAL QLayer tables
+of every assigned architecture (granite-20b: 312 QLayers x 25 combos) and
+report the paper's z-device amortization: total(z) = T_train + z * T_ilp.
+(Paper: ResNet18 0.06s / ResNet50 0.35s on CPU; AutoQ ~1000 GPU-hours.)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import importance as imp
+from repro.core import search
+from repro.models import lm
+
+
+def run(fast: bool = True):
+    rows = []
+
+    # Part 2: ILP time on every real arch (synthetic indicator values —
+    # solver time does not depend on the values)
+    rng = np.random.default_rng(0)
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        ql = lm.enumerate_qlayers(cfg)
+        ind = {q.name: {"w": np.sort(rng.uniform(0.01, 0.2, cfg.n_bits))[::-1],
+                        "a": np.sort(rng.uniform(0.01, 0.2, cfg.n_bits))[::-1]}
+               for q in ql}
+        budget = search.bitops_budget_for_uniform(ql, 4)
+        res_dp = search.search_policy(ql, ind, cfg.bits, alpha=1.0,
+                                      bitops_budget=budget, method="dp")
+        res_lg = search.search_policy(ql, ind, cfg.bits, alpha=1.0,
+                                      bitops_budget=budget,
+                                      method="lagrangian")
+        rows.append({"arch": arch, "n_qlayers": len(ql),
+                     "n_choices": cfg.n_bits ** 2,
+                     "ilp_dp_s": round(res_dp.elapsed_s, 4),
+                     "ilp_lagrangian_s": round(res_lg.elapsed_s, 4),
+                     "dp_optimal": res_dp.optimal})
+        print(f"search_efficiency {arch:24s} L={len(ql):4d} "
+              f"dp={res_dp.elapsed_s:.3f}s lagr={res_lg.elapsed_s:.4f}s")
+
+    # Part 1: indicator-training step cost at demo scale
+    cfg, params, ctx, batches = common.demo_setup(fast, n_batches=4)
+    t0 = time.perf_counter()
+    imp.train_importance(params, cfg, ctx, batches[:1], lr=0.01)
+    t_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    imp.train_importance(params, cfg, ctx, batches[1:4], lr=0.01)
+    t_step = (time.perf_counter() - t0) / 3
+    max_ilp = max(r["ilp_dp_s"] for r in rows)
+    print(f"search_efficiency: importance step {t_step:.2f}s "
+          f"(compile {t_compile:.1f}s); z-device total = T_train + z * "
+          f"{max_ilp:.3f}s  — search itself needs NO training data")
+    rows.append({"arch": "importance_step_s", "n_qlayers": "",
+                 "n_choices": "", "ilp_dp_s": round(t_step, 3),
+                 "ilp_lagrangian_s": "", "dp_optimal": ""})
+    common.write_csv("search_efficiency.csv", rows)
+    return {"max_ilp_dp_s": max_ilp}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Table 3/5 analog: model-size (compression-rate) constrained search,
+the dual BitOps+size constraint, and weight-only quantization."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import importance as imp
+from repro.core import search
+from repro.models import lm
+
+
+def run(fast: bool = True):
+    cfg, params, ctx, batches = common.demo_setup(fast, n_batches=30)
+    ql = lm.enumerate_qlayers(cfg)
+    train_b, eval_b = batches[:12], batches[24:]
+    params, _ = imp.train_importance(params, cfg, ctx, train_b[:8], lr=0.02)
+    ind = imp.extract_indicators(params, cfg, ql)
+
+    fp_bytes = sum(q.w_params for q in ql) * 4
+    rows = []
+
+    # Table 3: 12.2x compression-rate constraint
+    for rate in (8.0, 12.2):
+        size_budget = search.size_budget_for_rate(ql, 32, rate)
+        res = search.search_policy(ql, ind, cfg.bits, alpha=1.0,
+                                   size_budget_bytes=size_budget)
+        bits = lm.bits_from_policy(cfg, res.policy, ql)
+        ce, _ = common.finetune_and_eval(cfg, params, ctx, bits, train_b,
+                                         eval_b)
+        rows.append({"constraint": f"size {rate}x",
+                     "achieved_rate": round(fp_bytes / res.size_bytes, 2),
+                     "avg_w_bits": round(res.policy.avg_bits()[0], 2),
+                     "ce": round(ce, 4),
+                     "search_ms": round(res.elapsed_s * 1e3, 1)})
+        print(f"search_size rate={rate}x: achieved "
+              f"{rows[-1]['achieved_rate']}x ce={ce:.4f}")
+
+    # dual constraint (BitOps AND size)
+    bud_ops = search.bitops_budget_for_uniform(ql, 4)
+    bud_size = search.size_budget_for_rate(ql, 32, 10.0)
+    res = search.search_policy(ql, ind, cfg.bits, alpha=1.0,
+                               bitops_budget=bud_ops,
+                               size_budget_bytes=bud_size)
+    bits = lm.bits_from_policy(cfg, res.policy, ql)
+    ce, _ = common.finetune_and_eval(cfg, params, ctx, bits, train_b, eval_b)
+    rows.append({"constraint": "bitops(4b) + size 10x",
+                 "achieved_rate": round(fp_bytes / res.size_bytes, 2),
+                 "avg_w_bits": round(res.policy.avg_bits()[0], 2),
+                 "ce": round(ce, 4),
+                 "search_ms": round(res.elapsed_s * 1e3, 1)})
+    print(f"search_size dual: rate {rows[-1]['achieved_rate']}x "
+          f"bitops<=budget={res.bitops <= bud_ops * 1.000001} ce={ce:.4f}")
+
+    common.write_csv("search_size.csv", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,10 @@
+"""The paper's primary contribution (LIMPQ, Tang et al. 2022):
+
+  quantizer   — LSQ fake-quant + per-bit indicator banks (Eq. 1, §3.3)
+  importance  — one-shot joint indicator training (§3.4)
+  qspec       — QLayer: the unit of mixed-precision search + BitOps/size
+  ilp         — MCKP solvers (exact DP + Lagrangian + bruteforce checks)
+  search      — Eq. 3: indicators -> ILP -> MPQPolicy (+ Table-6 reversal)
+  policy      — the searched per-layer (b_w, b_a) artifact (serializable)
+  hessian     — HAWQ-style Hessian-trace criterion (comparison baseline)
+"""

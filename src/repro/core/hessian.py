@@ -1,0 +1,120 @@
+"""HAWQ-style Hessian-trace sensitivity baseline (Dong et al., HAWQ-v2).
+
+The paper argues this family of criteria is *biased*: the trace is computed
+on the full-precision network, blind to the quantizer. We implement it
+faithfully as the comparison baseline (benchmarks/hessian_baseline.py):
+
+  sensitivity_l(b) = (Tr(H_l) / numel_l) * ||Q_b(W_l) - W_l||^2
+
+with Tr(H_l) estimated by Hutchinson: E_v[v^T H v], v ~ Rademacher,
+restricted per layer. The resulting per-layer per-bit table plugs into the
+same MCKP solver as our learned indicators, so the two criteria are compared
+under identical search machinery.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qspec import QLayer
+from repro.core.quantizer import bit_range, fake_quant, init_scale_from_stats
+from repro.dist.axes import NO_AXES, MeshAxes
+from repro.models import lm
+from repro.models.quant_layers import QuantContext, fp_context
+
+
+def _weight_leaf(params, q: QLayer):
+    seg, idx = q.segment.split(".")
+    node = params[seg][idx]
+    for k in q.path:
+        node = node[k]
+    return node["w"]
+
+
+def hutchinson_traces(params, cfg: ModelConfig, batch,
+                      qlayers: Sequence[QLayer], rng, *,
+                      n_samples: int = 4,
+                      axes: MeshAxes = NO_AXES) -> Dict[str, float]:
+    """Per-QLayer Hessian-trace estimates of the FULL-PRECISION loss."""
+    ctx = fp_context(compute_dtype=jnp.float32)
+
+    def loss(p):
+        return lm.loss_fn(p, cfg, batch, None, ctx, axes, remat=False)[0]
+
+    grad_fn = jax.grad(loss)
+
+    def hvp(v):
+        return jax.jvp(grad_fn, (params,), (v,))[1]
+
+    # restrict probes to QLayer weight leaves; zeros elsewhere
+    names = {q.name: q for q in qlayers}
+    traces = {name: 0.0 for name in names}
+    for s in range(n_samples):
+        rng, sub = jax.random.split(rng)
+        keys = jax.random.split(sub, len(qlayers))
+        v = jax.tree.map(jnp.zeros_like, params)
+        v = {k: v[k] for k in v}
+        # build a full-tree Rademacher probe on weight leaves only
+        probe = jax.tree.map(jnp.zeros_like, params)
+        for key, q in zip(keys, qlayers):
+            w = _weight_leaf(params, q)
+            r = jax.random.rademacher(key, w.shape, w.dtype)
+            seg, idx = q.segment.split(".")
+            node = probe[seg][idx]
+            for kk in q.path[:-1]:
+                node = node[kk]
+            node[q.path[-1]]["w"] = r            # dicts are mutable pytrees
+        hv = hvp(probe)
+        for q in qlayers:
+            w_probe = _weight_leaf(probe, q)
+            w_hv = _weight_leaf(hv, q)
+            contrib = float(jnp.sum(w_probe.astype(jnp.float32)
+                                    * w_hv.astype(jnp.float32)))
+            if q.segment.startswith("body."):
+                # probes hit all units at once; attribute uniformly
+                contrib /= max(1, w_probe.shape[0])
+            traces[q.name] += contrib / n_samples
+    return traces
+
+
+def quantization_perturbations(params, cfg: ModelConfig,
+                               qlayers: Sequence[QLayer]) -> Dict[str, np.ndarray]:
+    """||Q_b(W) - W||^2 per QLayer per bit option (statistics-init scales)."""
+    out = {}
+    for q in qlayers:
+        w = _weight_leaf(params, q).astype(jnp.float32)
+        if q.segment.startswith("body."):
+            w = w[q.unit]
+        errs = []
+        for b in cfg.bits:
+            qmin, qmax = bit_range(int(b), True)
+            s = init_scale_from_stats(w, qmax)
+            qw = fake_quant(w, s, qmin, qmax)
+            errs.append(float(jnp.sum(jnp.square(qw - w))))
+        out[q.name] = np.asarray(errs, np.float64)
+    return out
+
+
+def hawq_sensitivities(params, cfg: ModelConfig, batch, rng, *,
+                       qlayers: Optional[Sequence[QLayer]] = None,
+                       n_samples: int = 4,
+                       axes: MeshAxes = NO_AXES):
+    """HAWQ-v2 style values table: name -> (n_bits,) sensitivity. Plug into
+    repro.core.search.search_policy via the `indicators` argument with
+    alpha=0 semantics (weights-only criterion, as HAWQ defines it)."""
+    qlayers = qlayers if qlayers is not None else lm.enumerate_qlayers(cfg)
+    traces = hutchinson_traces(params, cfg, batch, qlayers, rng,
+                               n_samples=n_samples, axes=axes)
+    perturb = quantization_perturbations(params, cfg, qlayers)
+    table = {}
+    for q in qlayers:
+        numel = max(1, q.w_params)
+        sens = max(traces[q.name], 0.0) / numel * perturb[q.name]
+        # shape it like learned indicators: weights-only criterion, so the
+        # activation half is zero (HAWQ does not rank activations).
+        table[q.name] = {"w": sens, "a": np.zeros_like(sens)}
+    return table

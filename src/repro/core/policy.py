@@ -1,0 +1,90 @@
+"""MPQPolicy: the searched per-layer (b_w, b_a) assignment.
+
+The policy is the artifact Eq. 3 produces. It serializes to JSON (deployable
+per device, paper §4.3's `z`-device scenario) and converts into the stacked
+per-segment bit-index arrays the scanned model consumes.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import qspec
+from repro.core.qspec import QLayer
+
+
+@dataclass
+class MPQPolicy:
+    w_bits: Dict[str, int]
+    a_bits: Dict[str, int]
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if set(self.w_bits) != set(self.a_bits):
+            raise ValueError("w_bits / a_bits must cover identical layers")
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def uniform(qlayers: Sequence[QLayer], bw: int, ba: int | None = None) -> "MPQPolicy":
+        ba = bw if ba is None else ba
+        return MPQPolicy({q.name: bw for q in qlayers},
+                         {q.name: ba for q in qlayers},
+                         meta={"kind": "uniform", "bw": bw, "ba": ba})
+
+    @staticmethod
+    def from_choice(qlayers: Sequence[QLayer], choice: np.ndarray,
+                    bits: Sequence[int], meta=None) -> "MPQPolicy":
+        """Decode an MCKP choice column (index into the (bw, ba) product)."""
+        n = len(bits)
+        w, a = {}, {}
+        for q, c in zip(qlayers, choice):
+            i, j = divmod(int(c), n)
+            w[q.name] = int(bits[i])
+            a[q.name] = int(bits[j])
+        return MPQPolicy(w, a, meta=dict(meta or {}))
+
+    # -- accounting --------------------------------------------------------
+    def bitops(self, qlayers: Sequence[QLayer], n_tokens: int) -> float:
+        return qspec.total_bitops(qlayers, self.w_bits, self.a_bits, n_tokens)
+
+    def size_bytes(self, qlayers: Sequence[QLayer]) -> float:
+        return qspec.total_size_bytes(qlayers, self.w_bits)
+
+    def avg_bits(self) -> Tuple[float, float]:
+        return (float(np.mean(list(self.w_bits.values()))),
+                float(np.mean(list(self.a_bits.values()))))
+
+    # -- model-facing view -------------------------------------------------
+    def bit_index_arrays(self, qlayers: Sequence[QLayer],
+                         bits: Sequence[int]) -> Dict[Tuple[str, Tuple[str, ...]], Dict[str, np.ndarray]]:
+        """Per stacked-tensor arrays of bank indices, ordered by unit."""
+        lut = {int(b): i for i, b in enumerate(bits)}
+        out = {}
+        for key, group in qspec.group_by_segment(qlayers).items():
+            out[key] = {
+                "w": np.asarray([lut[self.w_bits[q.name]] for q in group], np.int32),
+                "a": np.asarray([lut[self.a_bits[q.name]] for q in group], np.int32),
+            }
+        return out
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({"w_bits": self.w_bits, "a_bits": self.a_bits,
+                           "meta": self.meta}, indent=2, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "MPQPolicy":
+        d = json.loads(s)
+        return MPQPolicy(dict(d["w_bits"]), dict(d["a_bits"]), d.get("meta", {}))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path: str) -> "MPQPolicy":
+        with open(path) as f:
+            return MPQPolicy.from_json(f.read())

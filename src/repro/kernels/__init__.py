@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the quantization hot spots.
+
+  fake_quant   — fused Eq.-1 quantize-dequantize + LSQ backward (VPU tiles)
+  quant_matmul — int8 x int8 -> int32 MXU matmul, scale epilogue in VMEM
+  rwkv_scan    — chunked RWKV6 wkv recurrence, state resident in VMEM
+
+`ops` holds the jitted public wrappers (interpret=True on CPU), `ref` the
+pure-jnp oracles that tests assert against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import fake_quant as _fake_quant_core
+from repro.models.recurrent import wkv_scan_ref as _wkv_scan_ref
+
+
+def fake_quant_ref(v, s, qmin: float, qmax: float):
+    """Eq. 1 forward: round(clip(v/s, qmin, qmax)) * s (no STE plumbing)."""
+    s = jnp.maximum(s.astype(v.dtype), 1e-9)
+    return jnp.round(jnp.clip(v / s, qmin, qmax)) * s
+
+
+def fake_quant_grads_ref(v, s, g, qmin: float, qmax: float):
+    """LSQ backward: (dv, ds) per Esser et al. — the oracle for the fused
+    backward kernel (and cross-checked against jax.grad of the core STE
+    composition in tests)."""
+    s = jnp.maximum(s.astype(jnp.float32), 1e-9)
+    vs = v.astype(jnp.float32) / s
+    inside = (vs > qmin) & (vs < qmax)
+    dv = jnp.where(inside, g, 0.0)
+    dsd = jnp.where(inside, jnp.round(jnp.clip(vs, qmin, qmax)) - vs,
+                    jnp.clip(vs, qmin, qmax))
+    ds = jnp.sum(g.astype(jnp.float32) * dsd)
+    return dv.astype(v.dtype), ds
+
+
+def quant_matmul_ref(x_q, w_q, s_x, s_w):
+    """(q_x s_x) @ (q_w s_w) in f32 via int32 accumulation."""
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (s_x * s_w)
+
+
+def wkv_ref(r, k, v, log_w, u):
+    """Step-by-step wkv recurrence from zero state (f32)."""
+    B, S, H, hd = r.shape
+    state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, _ = _wkv_scan_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), log_w.astype(jnp.float32),
+                         u.astype(jnp.float32), state)
+    return y

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests see 1 device; only dryrun.py sets
+``xla_force_host_platform_device_count=512`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one 256-chip v5e pod; 2x16x16 = two pods (512 chips).
+
+    Axes: ('data', 'model') single-pod; ('pod', 'data', 'model') multi-pod.
+    pod x data is pure data-parallel (the gradient all-reduce over the
+    combined axes is hierarchical by construction: XLA emits the reduce over
+    the product group, intra-pod ICI first, cross-pod DCN once per step);
+    'model' is megatron tensor parallel.
+    """
+    if multi_pod:
+        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+    return jax.make_mesh((16, 16), ("data", "model"))
+
+
+def make_mesh_by_name(name: str):
+    if name in ("single", "single_pod", "pod", "16x16"):
+        return make_production_mesh(multi_pod=False), "16x16"
+    if name in ("multi", "multi_pod", "2x16x16"):
+        return make_production_mesh(multi_pod=True), "2x16x16"
+    if name in ("host", "cpu", "1"):
+        return jax.make_mesh((1,), ("data",)), "1"
+    raise ValueError(f"unknown mesh {name!r}")

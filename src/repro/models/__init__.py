@@ -1,0 +1,1 @@
+"""Config-driven model zoo: one LM engine (lm.py) + building blocks."""

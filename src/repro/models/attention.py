@@ -1,0 +1,363 @@
+"""Attention: GQA with RoPE, optional qk-norm, sliding-window, cross-attn,
+and a KV-cache decode path.
+
+Two execution paths, numerically cross-checked in tests:
+
+* ``direct`` — materializes (B, KV, G, Sq, Sk) logits; used for short
+  sequences and decode.
+* ``flash`` — pure-JAX online-softmax over q/kv blocks (lax.scan), O(block)
+  memory. For sliding-window attention the kv range per q-block is a
+  *static-length dynamic slice* of width ~window+q_block, so long-context
+  FLOPs scale as S*window, not S^2 (this is what makes long_500k lowerable
+  for the SWA archs). For full causal attention all kv blocks are computed
+  and masked (countable FLOPs; the ~2x triangle waste is recorded in the
+  roofline notes as a known gap).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool,
+               window: Optional[int]) -> Array:
+    """(Sq, Sk) additive bias. k_pos < 0 marks empty cache slots."""
+    valid = k_pos[None, :] >= 0
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        valid &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_logits(q: Array, k: Array) -> Array:
+    """q (B,Sq,KV,G,hd) x k (B,Sk,KV,hd) -> (B,KV,G,Sq,Sk) in f32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def direct_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                     *, causal: bool, window: Optional[int]) -> Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, hd) * (hd ** -0.5)
+    logits = _gqa_logits(qr, k) + _mask_bias(q_pos, k_pos, causal, window)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _flash_qblock(q_blk: Array, k_blk_src: Array, v_blk_src: Array,
+                  qpos_blk: Array, kpos_src: Array, *, causal: bool,
+                  window: Optional[int], kv_block: int) -> Array:
+    """Online softmax for one q block over all kv blocks of its kv slice."""
+    B, qb, KV, G, hd = q_blk.shape
+    Lkv = k_blk_src.shape[1]
+    n_kv = Lkv // kv_block
+
+    def body(carry, i):
+        m, l, acc = carry
+        s0 = i * kv_block
+        k_blk = jax.lax.dynamic_slice_in_dim(k_blk_src, s0, kv_block, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_blk_src, s0, kv_block, axis=1)
+        kpos = jax.lax.dynamic_slice_in_dim(kpos_src, s0, kv_block, axis=0)
+        logits = _gqa_logits(q_blk, k_blk)                    # (B,KV,G,qb,kvb)
+        logits += _mask_bias(qpos_blk, kpos, causal, window)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_kv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # (B,KV,G,qb,hd)
+    return out
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    window: Optional[int], q_block: int = 512,
+                    kv_block: int = 512) -> Array:
+    """Self-attention over equal-length q/k (training & prefill)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % q_block == 0, (S, q_block)
+    qr = (q.reshape(B, S, KV, G, hd) * (hd ** -0.5))
+    nqb = S // q_block
+
+    if window is not None and S > window + q_block:
+        # static-length kv slice per q block
+        Lkv = ((window + q_block + kv_block - 1) // kv_block) * kv_block
+        Lkv = min(Lkv, S)
+    else:
+        Lkv = S
+    kv_block = min(kv_block, Lkv)
+    assert Lkv % kv_block == 0, (Lkv, kv_block)
+
+    def per_qblock(carry, i):
+        qs = i * q_block
+        q_blk = jax.lax.dynamic_slice_in_dim(qr, qs, q_block, axis=1)
+        qpos = qs + jnp.arange(q_block)
+        start = jnp.clip(qs + q_block - Lkv, 0, S - Lkv)
+        k_src = jax.lax.dynamic_slice_in_dim(k, start, Lkv, axis=1)
+        v_src = jax.lax.dynamic_slice_in_dim(v, start, Lkv, axis=1)
+        kpos = start + jnp.arange(Lkv)
+        out = _flash_qblock(q_blk, k_src, v_src, qpos, kpos, causal=causal,
+                            window=window, kv_block=kv_block)
+        return carry, out
+
+    _, outs = jax.lax.scan(per_qblock, (), jnp.arange(nqb))
+    # outs: (nqb, B, KV, G, q_block, hd) -> (B, S, H, hd)
+    outs = jnp.moveaxis(outs, 0, 3)            # (B,KV,G,nqb,qb,hd)
+    B_, KV_, G_ = outs.shape[:3]
+    outs = outs.reshape(B_, KV_, G_, S, hd)
+    outs = jnp.moveaxis(outs, 3, 1)            # (B,S,KV,G,hd)
+    return outs.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP flash attention (FA2-style backward: recompute p from lse)
+# ---------------------------------------------------------------------------
+# The autodiff of the scan-based flash_attention saves every block's
+# probability matrix (f32, O(S * window)) as a scan residual — the dominant
+# HBM-traffic term of all attention-arch train cells in the baseline
+# roofline (EXPERIMENTS.md §Perf). This path stores only (out, lse) and
+# rebuilds p blockwise in the backward, the standard FlashAttention-2
+# recomputation, expressed in pure JAX (the Pallas analog on real TPUs
+# shares the same schedule).
+
+USE_PALLAS_FWD_ON_TPU = True
+
+
+def _flash_fwd_lse(qr, k, v, *, causal, window, q_block, kv_block):
+    """Forward with per-row logsumexp. qr pre-scaled (B,S,KV,G,hd).
+    Returns (out (B,S,KV,G,hd) f32, lse (B,KV,G,S) f32).
+
+    On a TPU backend this dispatches to the Pallas kernel
+    (repro.kernels.flash_attention): probability tiles stay in VMEM instead
+    of streaming through HBM — the fix for the dominant memory-roofline
+    term of the attention train cells (EXPERIMENTS.md §Perf). The pure-JAX
+    scan below is the CPU/dry-run path and the numerical oracle.
+    """
+    if USE_PALLAS_FWD_ON_TPU and jax.default_backend() == "tpu" \
+            and qr.shape[1] % kv_block == 0:
+        from repro.kernels import flash_attention as _fa
+        return _fa.flash_fwd_pallas(qr, k, v, causal=causal, window=window,
+                                    q_block=q_block, kv_block=kv_block)
+    B, S, KV, G, hd = qr.shape
+    nqb = S // q_block
+    Lkv, kvb = _kv_slice_len(S, window, q_block, kv_block)
+
+    def per_qblock(_, i):
+        qs = i * q_block
+        q_blk = jax.lax.dynamic_slice_in_dim(qr, qs, q_block, axis=1)
+        qpos = qs + jnp.arange(q_block)
+        if Lkv == S:
+            # full-span kv: keep it STATIC — a traced zero-offset slice
+            # hides the staticness from SPMD and forces resharding copies
+            k_src, v_src = k, v
+            kpos = jnp.arange(S)
+        else:
+            start = jnp.clip(qs + q_block - Lkv, 0, S - Lkv)
+            k_src = jax.lax.dynamic_slice_in_dim(k, start, Lkv, axis=1)
+            v_src = jax.lax.dynamic_slice_in_dim(v, start, Lkv, axis=1)
+            kpos = start + jnp.arange(Lkv)
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+
+        def body(carry, j):
+            m, l, acc = carry
+            s0 = j * kvb
+            k_blk = jax.lax.dynamic_slice_in_dim(k_src, s0, kvb, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_src, s0, kvb, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kpos, s0, kvb, axis=0)
+            logits = _gqa_logits(q_blk, k_blk) + _mask_bias(qpos, kp, causal,
+                                                            window)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype),
+                            v_blk, preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      jnp.arange(Lkv // kvb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return _, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(per_qblock, None, jnp.arange(nqb))
+    # outs (nqb,B,KV,G,qb,hd) -> (B,S,KV,G,hd); lses (nqb,B,KV,G,qb)
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, G, S, hd)
+    out = out.transpose(0, 3, 1, 2, 4)                 # (B,S,KV,G,hd)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, G, S)
+    return out, lse
+
+
+def _kv_slice_len(S, window, q_block, kv_block):
+    if window is not None and S > window + q_block:
+        Lkv = ((window + q_block + kv_block - 1) // kv_block) * kv_block
+        Lkv = min(Lkv, S)
+    else:
+        Lkv = S
+    return Lkv, min(kv_block, Lkv)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_cv(qr, k, v, causal, window, q_block, kv_block):
+    out, _ = _flash_fwd_lse(qr, k, v, causal=causal, window=window,
+                            q_block=q_block, kv_block=kv_block)
+    return out
+
+
+def _flash_cv_fwd(qr, k, v, causal, window, q_block, kv_block):
+    out, lse = _flash_fwd_lse(qr, k, v, causal=causal, window=window,
+                              q_block=q_block, kv_block=kv_block)
+    return out, (qr, k, v, out, lse)
+
+
+def _flash_cv_bwd(causal, window, q_block, kv_block, res, dout):
+    qr, k, v, out, lse = res
+    B, S, KV, G, hd = qr.shape
+    nqb = S // q_block
+    Lkv, kvb = _kv_slice_len(S, window, q_block, kv_block)
+    dout = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out)
+    Drow = jnp.sum(dout * out.astype(jnp.float32), axis=-1)   # (B,S,KV,G)
+    dk = jnp.zeros((B, S, KV, hd), jnp.float32)
+    dv = jnp.zeros((B, S, KV, hd), jnp.float32)
+
+    def per_qblock(carry, i):
+        dk, dv = carry
+        qs = i * q_block
+        q_blk = jax.lax.dynamic_slice_in_dim(qr, qs, q_block, axis=1)
+        do_blk = jax.lax.dynamic_slice_in_dim(dout, qs, q_block, axis=1)
+        D_blk = jax.lax.dynamic_slice_in_dim(Drow, qs, q_block, axis=1)
+        lse_blk = jax.lax.dynamic_slice_in_dim(lse, qs, q_block, axis=3)
+        qpos = qs + jnp.arange(q_block)
+        if Lkv == S:                       # static full span (see fwd note)
+            k_src, v_src, kpos, start = k, v, jnp.arange(S), None
+        else:
+            start = jnp.clip(qs + q_block - Lkv, 0, S - Lkv)
+            k_src = jax.lax.dynamic_slice_in_dim(k, start, Lkv, axis=1)
+            v_src = jax.lax.dynamic_slice_in_dim(v, start, Lkv, axis=1)
+            kpos = start + jnp.arange(Lkv)
+        # recompute p for the whole kv slice of this q block
+        logits = _gqa_logits(q_blk, k_src) + _mask_bias(qpos, kpos, causal,
+                                                        window)
+        p = jnp.exp(logits - lse_blk[..., None])              # (B,KV,G,qb,Lkv)
+        # dv_slice += p^T dout ; dp = dout v^T ; ds = p (dp - D)
+        do_r = do_blk.reshape(B, q_block, KV, G, hd)
+        dv_sl = jnp.einsum("bkgqs,bqkgd->bskd", p, do_r)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", do_r, v_src)
+        ds = p * (dp - D_blk.transpose(0, 2, 3, 1)[..., None])
+        dq_blk = jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                            k_src.astype(jnp.float32))
+        dk_sl = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                           q_blk.reshape(B, q_block, KV, G, hd
+                                         ).astype(jnp.float32))
+        # accumulate: plain whole-array add when the slice spans all of S
+        # (keeps the accumulators shardable without dynamic-offset DUS)
+        if start is None:
+            dk = dk + dk_sl
+            dv = dv + dv_sl
+        else:
+            cur_k = jax.lax.dynamic_slice_in_dim(dk, start, Lkv, axis=1)
+            cur_v = jax.lax.dynamic_slice_in_dim(dv, start, Lkv, axis=1)
+            dk = jax.lax.dynamic_update_slice_in_dim(dk, cur_k + dk_sl,
+                                                     start, axis=1)
+            dv = jax.lax.dynamic_update_slice_in_dim(dv, cur_v + dv_sl,
+                                                     start, axis=1)
+        return (dk, dv), dq_blk
+
+    (dk, dv), dq_blocks = jax.lax.scan(per_qblock, (dk, dv), jnp.arange(nqb))
+    dq = dq_blocks.reshape(nqb, B, q_block, KV, G, hd)
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, S, KV, G, hd)
+    return dq.astype(qr.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_cv.defvjp(_flash_cv_fwd, _flash_cv_bwd)
+
+FLASH_IMPL = "custom_vjp"        # "custom_vjp" | "xla_scan" (baseline)
+
+
+def flash_attention_cv(q: Array, k: Array, v: Array, *, causal: bool,
+                       window: Optional[int], q_block: int = 512,
+                       kv_block: int = 512) -> Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qr = q.reshape(B, S, KV, H // KV, hd) * (hd ** -0.5)
+    out = _flash_cv(qr, k, v, causal, window, q_block, kv_block)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def self_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                   window: Optional[int], flash_threshold: int = 2048,
+                   q_block: int = 512, kv_block: int = 512,
+                   impl: Optional[str] = None) -> Array:
+    S = q.shape[1]
+    if S >= flash_threshold and S % q_block == 0:
+        impl = impl or FLASH_IMPL
+        fn = flash_attention_cv if impl == "custom_vjp" else flash_attention
+        return fn(q, k, v, causal=causal, window=window,
+                  q_block=q_block, kv_block=kv_block)
+    pos = jnp.arange(S)
+    return direct_attention(q, k, v, pos, pos, causal=causal, window=window)
+
+
+def cross_attention(q: Array, k: Array, v: Array) -> Array:
+    """Text queries over (small) image-token KV; no mask."""
+    Skv = k.shape[1]
+    q_pos = jnp.arange(q.shape[1])
+    k_pos = jnp.arange(Skv)
+    return direct_attention(q, k, v, q_pos, k_pos, causal=False, window=None)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: Array      # (B, Sc, KV, hd) — ring buffer when Sc < full context
+    v: Array
+    pos: Array    # (Sc,) int32 absolute position per slot, -1 = empty
+
+
+def init_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
+        v=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
+        pos=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def decode_attention(q: Array, cache: KVCache, k_new: Array, v_new: Array,
+                     pos, *, window: Optional[int]):
+    """One-token decode: write (k_new, v_new) at slot pos % capacity, then
+    attend over the cache. RoPE is applied before caching, so slot order is
+    irrelevant to the softmax."""
+    B, one, H, hd = q.shape
+    cap = cache.k.shape[1]
+    slot = jnp.mod(pos, cap)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    pos_arr = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.asarray(pos, jnp.int32)[None], slot, axis=0)
+    q_pos = jnp.asarray(pos, jnp.int32)[None]
+    out = direct_attention(q, k, v, q_pos, pos_arr, causal=True, window=window)
+    return out, KVCache(k=k, v=v, pos=pos_arr)

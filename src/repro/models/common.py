@@ -1,0 +1,96 @@
+"""Shared model primitives: norms, activations, RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def norm_init(d: int, norm_type: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "ln":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(x: Array, p, norm_type: str, eps: float) -> Array:
+    if norm_type == "ln":
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":   # RWKV channel-mix uses squared relu
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-rotation convention)
+# ---------------------------------------------------------------------------
+def rope_table(head_dim: int, max_len: int, theta: float):
+    """(max_len, head_dim//2) cos/sin tables in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., S, H, D); cos/sin: (S, D//2) or broadcastable (..., S, 1, D//2)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x32[..., :d2], x32[..., d2:]
+    if cos.ndim == 2:  # (S, D//2) -> (S, 1, D//2) to broadcast over heads
+        cos = cos[:, None, :]
+        sin = sin[:, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def rope_at(cos_table: Array, sin_table: Array, positions: Array):
+    """Gather per-position rows: positions (...,) -> (..., D//2)."""
+    return jnp.take(cos_table, positions, axis=0), jnp.take(sin_table, positions, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(rng, in_dim: int, out_dim: int, *, stacked=(), dtype=jnp.float32):
+    shape = tuple(stacked) + (in_dim, out_dim)
+    std = in_dim ** -0.5
+    return jax.random.normal(rng, shape, dtype) * std
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    # d^-0.5 keeps tied-embedding logits O(|x|); the first norm layer
+    # rescales activations regardless.
+    return jax.random.normal(rng, (vocab, d), dtype) * d ** -0.5

@@ -1,0 +1,359 @@
+"""Attention-free mixers: RWKV6 'Finch' time/channel-mix and the Griffin
+RG-LRU recurrent block (recurrentgemma).
+
+Both are written so the *projections* (the FLOP carriers) are QLayers with
+per-bit indicator banks, while the recurrence control parameters (decay
+loras, RG-LRU gates, conv1d) stay full-precision — the LM analog of the
+paper keeping BN/elementwise ops unquantized (DESIGN.md §5).
+
+Sequence processing:
+
+* RWKV6 wkv uses a *chunked* formulation (GLA-style): within a chunk the
+  pairwise per-channel decay tensor has exponents `L_t - L_{tau+1} <= 0`
+  for every causal pair, so everything is computed with exp() of
+  non-positive numbers — unconditionally stable, no secondary chunking.
+  A step-by-step `wkv_scan_ref` oracle cross-checks it in tests, and the
+  Pallas kernel (`repro.kernels.rwkv_scan`) implements the same math with
+  VMEM tiles for TPU.
+* RG-LRU uses `jax.lax.associative_scan` (O(log S) depth) — decays are
+  sigmoids so `a_t <= 1` and the scan is stable by construction.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+from repro.models.quant_layers import QuantContext, qdense_init, qeinsum
+
+Array = jax.Array
+
+RWKV_LORA_R = 32       # ddlerp low-rank
+RWKV_DECAY_R = 64      # decay low-rank
+RGLRU_C = 8.0          # Griffin's fixed temperature on the recurrent gate
+MIN_LOG_W = -8.0       # clamp: per-step decay w >= e^-8 (numerical floor)
+WKV_REMAT = True       # perf switch: recompute chunk tensors in backward
+
+
+def token_shift(x: Array, x_prev: Optional[Array]) -> Array:
+    """RWKV token shift: value of the *previous* timestep (zeros / carried)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+# ===========================================================================
+# RWKV6 time-mix + channel-mix
+# ===========================================================================
+def rwkv_init(rng, d_model: int, n_heads: int, head_dim: int, d_ff: int,
+              bits, *, stacked=()):
+    D, H, hd = d_model, n_heads, head_dim
+    assert H * hd == D, (H, hd, D)
+    ks = jax.random.split(rng, 16)
+    z = lambda *s: jnp.zeros(stacked + s, jnp.float32)
+
+    p = {
+        # ddlerp mixing (fp)
+        "mu_x": z(D),
+        "mu": z(5, D),                                      # w,k,v,r,g
+        "lora_A": dense_init(ks[0], D, 5 * RWKV_LORA_R, stacked=stacked) * 0.1,
+        "lora_B": jnp.zeros(stacked + (5, RWKV_LORA_R, D), jnp.float32),
+        # data-dependent decay (fp)
+        "w0": z(D) - 4.0,                                   # init: slowish decay
+        "wd1": dense_init(ks[1], D, RWKV_DECAY_R, stacked=stacked) * 0.1,
+        "wd2": jnp.zeros(stacked + (RWKV_DECAY_R, D), jnp.float32),
+        "u": z(H, hd) + 0.5,                                # bonus
+        # head group-norm (fp)
+        "ln_x_scale": z(D) + 1.0,
+        "ln_x_bias": z(D),
+        # projections (QLayers)
+        "wr": qdense_init(ks[2], D, D, bits, stacked=stacked),
+        "wk": qdense_init(ks[3], D, D, bits, stacked=stacked),
+        "wv": qdense_init(ks[4], D, D, bits, stacked=stacked),
+        "wg": qdense_init(ks[5], D, D, bits, stacked=stacked),
+        "wo": qdense_init(ks[6], D, D, bits, stacked=stacked),
+        # channel-mix
+        "mu_ck": z(D),
+        "mu_cr": z(D),
+        "cm_wk": qdense_init(ks[7], D, d_ff, bits, stacked=stacked),
+        "cm_wv": qdense_init(ks[8], d_ff, D, bits, stacked=stacked),
+        "cm_wr": qdense_init(ks[9], D, D, bits, stacked=stacked),
+    }
+    return p
+
+
+RWKV_QLAYER_PATHS = ("wr", "wk", "wv", "wg", "wo", "cm_wk", "cm_wv", "cm_wr")
+
+
+def _ddlerp(x: Array, xs: Array, p) -> Tuple[Array, ...]:
+    """RWKV6 data-dependent lerp -> the 5 mixed inputs (w, k, v, r, g)."""
+    sx = xs - x
+    xxx = x + sx * p["mu_x"].astype(x.dtype)
+    B, S, D = x.shape
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["lora_A"].astype(x.dtype)))
+    lo = lo.reshape(B, S, 5, RWKV_LORA_R)
+    lo = jnp.einsum("bsfr,frd->bsfd", lo, p["lora_B"].astype(x.dtype))
+    mixed = []
+    for i in range(5):
+        m = p["mu"][i].astype(x.dtype) + lo[:, :, i]
+        mixed.append(x + sx * m)
+    return tuple(mixed)   # x_w, x_k, x_v, x_r, x_g
+
+
+def _decay_log(x_w: Array, p) -> Array:
+    """log w_t in (-inf, 0): w = exp(-exp(w0 + tanh(x_w wd1) wd2)), clamped."""
+    d = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", x_w.astype(jnp.float32),
+                            p["wd1"].astype(jnp.float32))),
+        p["wd2"].astype(jnp.float32))
+    return jnp.clip(-jnp.exp(d), MIN_LOG_W, -1e-6)
+
+
+def wkv_scan_ref(r: Array, k: Array, v: Array, log_w: Array, u: Array,
+                 state: Array) -> Tuple[Array, Array]:
+    """Step-by-step wkv oracle. r/k/v/log_w: (B, S, H, hd); state (B, H, hd, hd).
+
+    y_t = r_t . (S_t + (u*k_t) v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp      # (B, H, hd)
+        w_t = jnp.exp(lw_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S) \
+            + jnp.einsum("bhi,bhi,bhj->bhj", r_t, u * k_t, v_t)
+        S = w_t[..., None] * S + jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, log_w: Array, u: Array,
+                state: Array, chunk: int = 32,
+                remat: bool = True) -> Tuple[Array, Array]:
+    """Chunked wkv. Shapes as in `wkv_scan_ref`; S % chunk == 0.
+
+    Within a chunk, every causal pair (t > tau) uses decay
+    exp(L_t - L_{tau+1}) with L the inclusive-exclusive cumulative log-decay;
+    all exponents are <= 0 so exp() never overflows.
+
+    `remat=True` recomputes the per-chunk (B,H,T,T,hd) decay tensor in the
+    backward instead of stashing it per scan step — the baseline roofline
+    showed those residuals dominating rwkv6 train HBM traffic
+    (EXPERIMENTS.md §Perf).
+    """
+    B, S, H, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    T = chunk
+
+    def reshape(a):
+        return a.reshape(B, n_chunks, T, H, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(reshape, (r, k, v, log_w))   # (N, B, H, T, hd)
+    uu = u[None]                                       # (1, H, hd)
+
+    tri_strict = jnp.tril(jnp.ones((T, T), jnp.float32), -1)
+
+    def chunk_step(S0, inp):
+        rt, kt, vt, lwt = (a.astype(jnp.float32) for a in inp)  # (B,H,T,hd)
+        L = jnp.cumsum(lwt, axis=2)                  # L_t = sum_{tau<=t} lw
+        Lx = L - lwt                                 # exclusive: sum_{tau<t}
+        # inter-chunk: y_t += (r_t * e^{Lx_t}) . S0
+        r_in = rt * jnp.exp(Lx)
+        y = jnp.einsum("bhti,bhij->bhtj", r_in, S0)
+        # intra-chunk strict-causal pairs: decay exponent Lx_t - L_tau <= 0
+        expo = Lx[:, :, :, None, :] - L[:, :, None, :, :]   # (B,H,t,tau,hd)
+        dec = jnp.exp(jnp.minimum(expo, 0.0)) * tri_strict[None, None, :, :, None]
+        A = jnp.einsum("bhti,bhtsi,bhsi->bhts", rt, dec, kt)
+        y += jnp.einsum("bhts,bhsj->bhtj", A, vt)
+        # diagonal (bonus) term
+        y += jnp.einsum("bhti,bhti,bhtj->bhtj", rt, uu[..., None, :] * kt, vt)
+        # state update: S' = e^{L_T} S0 + sum_tau e^{L_T - L_tau} k_tau v_tau^T
+        LT = L[:, :, -1:, :]                          # (B,H,1,hd)
+        k_dec = kt * jnp.exp(LT - L)
+        S1 = jnp.exp(LT[:, :, 0, :, None]) * S0 \
+            + jnp.einsum("bhti,bhtj->bhij", k_dec, vt)
+        return S1, y
+
+    step = jax.checkpoint(chunk_step, prevent_cse=False) if remat \
+        else chunk_step
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                             (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return y.astype(r.dtype), state
+
+
+def _head_groupnorm(y: Array, scale: Array, bias: Array, eps: float = 64e-5) -> Array:
+    """RWKV ln_x: GroupNorm with one group per head, affine over D."""
+    B, S, H, hd = y.shape
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    yn = (y32 - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(B, S, H * hd)
+    return (yn * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv_time_mix(x: Array, p, bits: Optional[Dict], ctx: QuantContext,
+                  n_heads: int, head_dim: int,
+                  state: Optional[Tuple[Array, Array]] = None,
+                  chunk: int = 32, use_chunked: bool = True):
+    """x: (B, S, D). state = (x_prev (B,1,D), wkv (B,H,hd,hd)) or None.
+
+    Returns (out, new_state).
+    """
+    B, S, D = x.shape
+    H, hd = n_heads, head_dim
+    x_prev = None if state is None else state[0]
+    wkv0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+            else state[1])
+
+    xs = token_shift(x, x_prev)
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(x, xs, p)
+    log_w = _decay_log(x_w, p).reshape(B, S, H, hd)
+
+    def b(name):
+        return None if bits is None else bits[name]
+    r = qeinsum("bsd,de->bse", x_r, p["wr"], b("wr"), ctx).reshape(B, S, H, hd)
+    k = qeinsum("bsd,de->bse", x_k, p["wk"], b("wk"), ctx).reshape(B, S, H, hd)
+    v = qeinsum("bsd,de->bse", x_v, p["wv"], b("wv"), ctx).reshape(B, S, H, hd)
+    g = jax.nn.silu(qeinsum("bsd,de->bse", x_g, p["wg"], b("wg"), ctx))
+
+    u = p["u"].astype(jnp.float32)
+    if use_chunked and S % chunk == 0 and S > 1:
+        y, wkv1 = wkv_chunked(r, k, v, log_w, u, wkv0, chunk=chunk,
+                              remat=WKV_REMAT)
+    else:
+        y, wkv1 = wkv_scan_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), log_w, u, wkv0)
+        y = y.astype(x.dtype)
+
+    y = _head_groupnorm(y, p["ln_x_scale"], p["ln_x_bias"])
+    y = y * g
+    out = qeinsum("bsd,de->bse", y, p["wo"], b("wo"), ctx)
+    new_state = (x[:, -1:], wkv1)
+    return out, new_state
+
+
+def rwkv_channel_mix(x: Array, p, bits: Optional[Dict], ctx: QuantContext,
+                     state: Optional[Array] = None):
+    """x: (B, S, D). state = x_prev (B, 1, D) or None. Returns (out, state)."""
+    xs = token_shift(x, state)
+    xk = x + (xs - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xs - x) * p["mu_cr"].astype(x.dtype)
+
+    def b(name):
+        return None if bits is None else bits[name]
+    k = qeinsum("bsd,df->bsf", xk, p["cm_wk"], b("cm_wk"), ctx)
+    k = jnp.square(jax.nn.relu(k))
+    kv = qeinsum("bsf,fd->bsd", k, p["cm_wv"], b("cm_wv"), ctx)
+    rgate = jax.nn.sigmoid(qeinsum("bsd,de->bse", xr, p["cm_wr"], b("cm_wr"), ctx))
+    return rgate * kv, x[:, -1:]
+
+
+# ===========================================================================
+# RG-LRU recurrent block (Griffin / recurrentgemma)
+# ===========================================================================
+def rglru_init(rng, d_model: int, lru_width: int, n_heads: int,
+               conv_width: int, bits, *, stacked=()):
+    W = lru_width or d_model
+    ks = jax.random.split(rng, 8)
+    bw = W // n_heads     # block-diagonal gate width
+    z = lambda *s: jnp.zeros(stacked + s, jnp.float32)
+    # Lambda init so a = sigmoid(lam)^c spreads over (0.9, 0.999) — Griffin A.2
+    lam = jnp.linspace(2.2, 6.0, W, dtype=jnp.float32)
+    lam = jnp.broadcast_to(lam, stacked + (W,))
+    return {
+        "wx": qdense_init(ks[0], d_model, W, bits, stacked=stacked),
+        "wgate": qdense_init(ks[1], d_model, W, bits, stacked=stacked),
+        "wo": qdense_init(ks[2], W, d_model, bits, stacked=stacked),
+        "conv_w": dense_init(ks[3], conv_width, 1, stacked=stacked)[..., 0]
+        [..., None] * jnp.ones(stacked + (conv_width, W)),
+        "conv_b": z(W),
+        # block-diagonal gates (fp): (n_heads, bw, bw)
+        "gate_a_w": dense_init(ks[4], bw, bw, stacked=stacked + (n_heads,)),
+        "gate_a_b": z(n_heads, bw),
+        "gate_x_w": dense_init(ks[5], bw, bw, stacked=stacked + (n_heads,)),
+        "gate_x_b": z(n_heads, bw),
+        "lam": lam,
+    }
+
+
+RGLRU_QLAYER_PATHS = ("wx", "wgate", "wo")
+
+
+def _causal_conv1d(u: Array, w: Array, b: Array,
+                   state: Optional[Array]) -> Tuple[Array, Array]:
+    """Depthwise causal conv. u: (B, S, W); w: (cw, W); state (B, cw-1, W)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state.astype(u.dtype), u], axis=1)   # (B, S+cw-1, W)
+    S = u.shape[1]
+    out = jnp.zeros_like(u)
+    for j in range(cw):            # cw = 4: four shifted multiply-adds
+        out = out + ext[:, j:j + S] * w[cw - 1 - j].astype(u.dtype)
+    out = out + b.astype(u.dtype)
+    return out, ext[:, -(cw - 1):] if cw > 1 else state
+
+
+def _block_diag_gate(u: Array, w: Array, b: Array, n_heads: int) -> Array:
+    """sigmoid(block-diagonal linear). u: (B, S, W); w: (H, bw, bw)."""
+    B, S, W = u.shape
+    bw = W // n_heads
+    uh = u.reshape(B, S, n_heads, bw)
+    y = jnp.einsum("bshi,hij->bshj", uh.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return jax.nn.sigmoid(y).reshape(B, S, W)
+
+
+def rglru_scan(a: Array, bx: Array, h0: Optional[Array]) -> Array:
+    """h_t = a_t * h_{t-1} + bx_t via associative scan. a/bx: (B, S, W) f32."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(bx.dtype))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(x: Array, p, bits: Optional[Dict], ctx: QuantContext,
+                n_heads: int, state: Optional[Tuple[Array, Array]] = None):
+    """Griffin recurrent block. x: (B, S, D).
+
+    state = (conv_buf (B, cw-1, W), h (B, W)) or None. Returns (out, state).
+    """
+    def b(name):
+        return None if bits is None else bits[name]
+
+    u = qeinsum("bsd,dw->bsw", x, p["wx"], b("wx"), ctx)
+    gate = jax.nn.gelu(qeinsum("bsd,dw->bsw", x, p["wgate"], b("wgate"), ctx))
+
+    conv_state = None if state is None else state[0]
+    u, conv_state = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+
+    # RG-LRU
+    r = _block_diag_gate(u, p["gate_a_w"], p["gate_a_b"], n_heads)
+    i = _block_diag_gate(u, p["gate_x_w"], p["gate_x_b"], n_heads)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                       # (B,S,W) in (0,1)
+    gated = i * u.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    h0 = None if state is None else state[1]
+    if x.shape[1] == 1:                                      # decode fast path
+        hprev = jnp.zeros_like(bx[:, 0]) if h0 is None else h0.astype(jnp.float32)
+        h = (a[:, 0] * hprev + bx[:, 0])[:, None]
+    else:
+        h = rglru_scan(a, bx, h0)
+    y = h.astype(x.dtype) * gate
+    out = qeinsum("bsw,wd->bsd", y, p["wo"], b("wo"), ctx)
+    return out, (conv_state, h[:, -1].astype(jnp.float32))

@@ -1,0 +1,65 @@
+"""QAT finetune / pretrain step factory.
+
+After the ILP search, the model is finetuned with the searched policy's
+*static* bit assignment active (paper §4.1: 90 epochs, cosine LR, SGD).
+The same factory also produces the full-precision and uniform-bit baseline
+steps — one code path for every experiment row.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ModelConfig
+from repro.dist.axes import NO_AXES, MeshAxes
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+
+
+def make_train_step(cfg: ModelConfig, ctx: QuantContext,
+                    optimizer: optim.Optimizer, bits,
+                    axes: MeshAxes = NO_AXES, *,
+                    remat: bool = True) -> Callable:
+    """step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    `bits` is a static bit-assignment pytree (or None for full precision) —
+    closure-captured so the ILP policy is baked into the compiled step.
+    """
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, batch, bits, ctx, axes,
+                                      remat)
+        gnorm = optim.global_norm(grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, ctx: QuantContext, bits,
+                   axes: MeshAxes = NO_AXES) -> Callable:
+    def step(params, batch):
+        loss, metrics = lm.loss_fn(params, cfg, batch, bits, ctx, axes,
+                                   remat=False)
+        return metrics
+    return step
+
+
+def evaluate(params, cfg: ModelConfig, ctx: QuantContext, bits, batches,
+             axes: MeshAxes = NO_AXES, jit: bool = True) -> dict:
+    step = make_eval_step(cfg, ctx, bits, axes)
+    if jit:
+        step = jax.jit(step)
+    total, n = None, 0
+    for b in batches:
+        m = step(params, b)
+        total = m if total is None else jax.tree.map(jnp.add, total, m)
+        n += 1
+    return {k: float(v) / n for k, v in jax.device_get(total).items()}

@@ -1,0 +1,117 @@
+"""Attention paths: flash == direct, windows, GQA, decode cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+
+
+def _qkv(rng, B=2, S=1024, H=4, KV=2, hd=16, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 200),
+                                           (False, None)])
+def test_flash_matches_direct(rng, causal, window):
+    q, k, v = _qkv(rng)
+    pos = jnp.arange(q.shape[1])
+    ref = attn.direct_attention(q, k, v, pos, pos, causal=causal,
+                                window=window)
+    out = attn.flash_attention(q, k, v, causal=causal, window=window,
+                               q_block=128, kv_block=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_sliding_window_subquadratic_slice(rng):
+    """The windowed kv slice must produce identical results to full direct
+    attention with the same window."""
+    q, k, v = _qkv(rng, S=2048)
+    pos = jnp.arange(2048)
+    ref = attn.direct_attention(q, k, v, pos, pos, causal=True, window=256)
+    out = attn.flash_attention(q, k, v, causal=True, window=256,
+                               q_block=256, kv_block=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_grouping(rng):
+    """GQA must equal MHA with kv heads repeated."""
+    B, S, H, KV, hd = 2, 64, 8, 2, 16
+    q, k, v = _qkv(rng, B=B, S=S, H=H, KV=KV, hd=hd)
+    pos = jnp.arange(S)
+    out = attn.direct_attention(q, k, v, pos, pos, causal=True, window=None)
+    k_rep = jnp.repeat(k, H // KV, axis=2)
+    v_rep = jnp.repeat(v, H // KV, axis=2)
+    ref = attn.direct_attention(q, k_rep, v_rep, pos, pos, causal=True,
+                                window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_decode_cache_ring_buffer(rng):
+    """Windowed ring buffer decode == direct attention over the window."""
+    B, H, KV, hd, window = 1, 2, 1, 8, 4
+    S = 10
+    q_all, k_all, v_all = _qkv(rng, B=B, S=S, H=H, KV=KV, hd=hd)
+    cache = attn.init_kv_cache(B, window, KV, hd, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        out, cache = attn.decode_attention(
+            q_all[:, t:t + 1], cache, k_all[:, t:t + 1], v_all[:, t:t + 1],
+            jnp.asarray(t, jnp.int32), window=window)
+        outs.append(out)
+    got = jnp.concatenate(outs, axis=1)
+    pos = jnp.arange(S)
+    ref = attn.direct_attention(q_all, k_all, v_all, pos, pos, causal=True,
+                                window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_empty_slots_masked(rng):
+    """Fresh cache slots (pos = -1) must not contribute."""
+    B, KV, hd, cap = 1, 1, 8, 6
+    q = jax.random.normal(rng, (B, 1, 2, hd))
+    k1 = jax.random.normal(jax.random.PRNGKey(1), (B, 1, KV, hd))
+    v1 = jax.random.normal(jax.random.PRNGKey(2), (B, 1, KV, hd))
+    cache = attn.init_kv_cache(B, cap, KV, hd, dtype=jnp.float32)
+    out, _ = attn.decode_attention(q, cache, k1, v1,
+                                   jnp.asarray(0, jnp.int32), window=None)
+    # attending over exactly one valid slot => output == v of that slot
+    np.testing.assert_allclose(np.asarray(out[0, 0, 0]), np.asarray(v1[0, 0, 0]),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_flash_custom_vjp_values_and_grads(rng, causal, window):
+    """FA2-style custom-vjp path == direct attention, values AND grads."""
+    B, S, H, KV, hd = 2, 256, 4, 2, 16
+    q, k, v = _qkv(rng, B=B, S=S, H=H, KV=KV, hd=hd)
+    pos = jnp.arange(S)
+
+    def f_direct(q, k, v):
+        return jnp.sum(jnp.sin(attn.direct_attention(
+            q, k, v, pos, pos, causal=causal, window=window)))
+
+    def f_cv(q, k, v):
+        return jnp.sum(jnp.sin(attn.flash_attention_cv(
+            q, k, v, causal=causal, window=window, q_block=64, kv_block=64)))
+
+    o_d = attn.direct_attention(q, k, v, pos, pos, causal=causal,
+                                window=window)
+    o_c = attn.flash_attention_cv(q, k, v, causal=causal, window=window,
+                                  q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_d), atol=2e-5,
+                               rtol=2e-5)
+    g_d = jax.grad(f_direct, argnums=(0, 1, 2))(q, k, v)
+    g_c = jax.grad(f_cv, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_c, g_d):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                                   rtol=2e-5)

@@ -1,0 +1,82 @@
+"""Assigned-architecture configs must match the brief EXACTLY."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs, smoke_config
+from repro.configs.base import SHAPES_BY_NAME, shape_applicable
+
+EXPECT = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+}
+
+
+def test_all_ten_assigned():
+    assert set(ASSIGNED_ARCHS) == set(EXPECT)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECT))
+def test_exact_dims(name):
+    cfg = get_config(name)
+    L, d, H, KV, ff, V = EXPECT[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff
+    assert cfg.vocab == V
+    assert cfg.bits == (2, 3, 4, 5, 6)      # paper §4.1 search space
+
+
+def test_family_flags():
+    assert get_config("mixtral-8x7b").moe.n_experts == 8
+    assert get_config("mixtral-8x7b").moe.top_k == 2
+    assert get_config("deepseek-moe-16b").moe.n_experts == 64
+    assert get_config("deepseek-moe-16b").moe.top_k == 6
+    assert get_config("deepseek-moe-16b").moe.n_shared == 2
+    assert get_config("qwen3-0.6b").qk_norm
+    assert get_config("hubert-xlarge").encoder_only
+    assert not get_config("hubert-xlarge").causal
+    assert get_config("rwkv6-7b").family == "ssm"
+    assert get_config("recurrentgemma-2b").block_pattern == ("rec", "rec", "attn")
+    assert get_config("llama-3.2-vision-11b").cross_attn_every == 5
+
+
+def test_shape_skip_rules():
+    """DESIGN.md §5 skip list."""
+    runs_500k = {"starcoder2-7b", "mixtral-8x7b", "rwkv6-7b",
+                 "recurrentgemma-2b"}
+    for name in EXPECT:
+        cfg = get_config(name)
+        ok, _ = shape_applicable(cfg, SHAPES_BY_NAME["long_500k"])
+        assert ok == (name in runs_500k), name
+    ok, _ = shape_applicable(get_config("hubert-xlarge"),
+                             SHAPES_BY_NAME["decode_32k"])
+    assert not ok
+
+
+def test_smoke_configs_are_small():
+    for name in EXPECT:
+        cfg = smoke_config(name)
+        assert cfg.d_model <= 128 and cfg.vocab <= 512
+        assert cfg.n_layers <= 8
+
+
+def test_cell_count():
+    """40 grid cells; 33 runnable after documented skips."""
+    total = runnable = 0
+    for name in EXPECT:
+        cfg = get_config(name)
+        for sname, shape in SHAPES_BY_NAME.items():
+            total += 1
+            runnable += shape_applicable(cfg, shape)[0]
+    assert total == 40
+    assert runnable == 33

@@ -1,0 +1,64 @@
+"""Serving-path integration: prefill + step-by-step decode must reproduce
+the train-mode forward logits exactly (same quantization active)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.dist.axes import NO_AXES
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+
+from conftest import make_inputs
+
+# one representative per family mechanism: qk_norm+tied, SWA+GQA fallback,
+# MoE+shared experts, attention-free, hybrid recurrence, cross-attn VLM
+ARCHS = ["qwen3-0.6b", "starcoder2-7b", "deepseek-moe-16b", "rwkv6-7b",
+         "recurrentgemma-2b", "llama-3.2-vision-11b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    cfg = smoke_config(arch)
+    params = lm.init_params(rng, cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    B, S, P = 2, 24, 20
+    inputs = make_inputs(cfg, rng, B=B, S=S)
+    bits = lm.bits_uniform(cfg, 3)
+
+    full, _ = lm.apply_train(params, cfg, inputs, bits, ctx, NO_AXES,
+                             remat=False)
+    pre = dict(inputs)
+    pre["tokens"] = inputs["tokens"][:, :P]
+    lg, state = lm.apply_prefill(params, cfg, pre, bits, ctx, NO_AXES,
+                                 prefill_cap=S)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, P - 1]),
+                               atol=2e-4, rtol=2e-4)
+    for t in range(P, S):
+        tok = inputs["tokens"][:, t:t + 1]
+        lg, state = lm.apply_decode(params, cfg, tok,
+                                    jnp.asarray(t, jnp.int32), state, bits,
+                                    ctx, NO_AXES)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   atol=2e-4, rtol=2e-4,
+                                   err_msg=f"{arch} step {t}")
+
+
+def test_decode_state_shapes(rng):
+    cfg = smoke_config("mixtral-8x7b")
+    state = lm.init_decode_state(cfg, batch=2, capacity=128)
+    sched = lm.build_schedule(cfg)
+    # windowed arch: cache capacity clamps to the sliding window
+    cache = state["body"]["0"]
+    assert cache.k.shape == (sched.repeats, 2,
+                             min(128, cfg.sliding_window),
+                             cfg.n_kv_heads, cfg.hd)
+
+
+def test_encoder_only_has_no_decode():
+    cfg = smoke_config("hubert-xlarge")
+    from repro.configs.base import SHAPES_BY_NAME, shape_applicable
+    ok, why = shape_applicable(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert not ok and "encoder-only" in why

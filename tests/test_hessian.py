@@ -1,0 +1,44 @@
+"""Hutchinson trace estimator sanity on a known quadratic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def test_hutchinson_on_quadratic():
+    """loss = 0.5 x^T A x  =>  H = A, Tr(H) known exactly. A is PSD so the
+    trace is bounded away from 0 and a relative tolerance is meaningful."""
+    rng = np.random.default_rng(0)
+    n = 16
+    A = rng.standard_normal((n, n))
+    A = A @ A.T / n
+    Aj = jnp.asarray(A, jnp.float32)
+
+    def loss(x):
+        return 0.5 * x @ Aj @ x
+
+    grad = jax.grad(loss)
+    key = jax.random.PRNGKey(0)
+    est = 0.0
+    n_samples = 400
+    for i in range(n_samples):
+        key, k = jax.random.split(key)
+        v = jax.random.rademacher(k, (n,), jnp.float32)
+        hv = jax.jvp(grad, (jnp.zeros(n),), (v,))[1]
+        est += float(v @ hv) / n_samples
+    np.testing.assert_allclose(est, np.trace(A), rtol=0.25)
+
+
+def test_hawq_table_monotone_in_bits(rng):
+    """Perturbation ||Q_b(W)-W||^2 must shrink as bits grow, so HAWQ
+    sensitivities are monotone per layer."""
+    from repro.configs import get_config
+    from repro.core import hessian
+    from repro.models import lm
+
+    cfg = get_config("limpq-demo").scaled(n_layers=2, d_model=64, n_heads=2,
+                                          n_kv_heads=2, d_ff=128, vocab=128)
+    params = lm.init_params(rng, cfg)
+    ql = lm.enumerate_qlayers(cfg)
+    pert = hessian.quantization_perturbations(params, cfg, ql)
+    for name, errs in pert.items():
+        assert np.all(np.diff(errs) <= 1e-6), name   # decreasing with bits

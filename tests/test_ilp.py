@@ -1,0 +1,89 @@
+"""MCKP/ILP solver tests: exactness vs brute force, feasibility, duals."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ilp
+
+
+def _rand_instance(rng, L, C):
+    values = rng.uniform(0.1, 5.0, (L, C))
+    costs = rng.uniform(0.5, 4.0, (L, C))
+    # make higher-value choices cheaper on average (like bits: low bit =
+    # high indicator value = low cost)
+    order = np.argsort(costs, axis=1)
+    costs = np.take_along_axis(costs, order, axis=1)
+    values = np.take_along_axis(values, order[:, ::-1], axis=1)
+    return values, costs
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 4),
+       st.floats(0.3, 0.95))
+def test_dp_matches_bruteforce(seed, L, C, budget_frac):
+    rng = np.random.default_rng(seed)
+    values, costs = _rand_instance(rng, L, C)
+    lo = costs.min(axis=1).sum()
+    hi = costs.max(axis=1).sum()
+    budget = lo + budget_frac * (hi - lo)
+    bf = ilp.solve_bruteforce(values, costs, budget)
+    dp = ilp.solve_dp(values, costs, budget, bins=4096)
+    assert dp.feasible
+    assert dp.value <= bf.value + 1e-6 or \
+        abs(dp.value - bf.value) / max(abs(bf.value), 1e-9) < 5e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 30), st.integers(2, 6))
+def test_lagrangian_feasible_and_bounded(seed, L, C):
+    rng = np.random.default_rng(seed)
+    values, costs = _rand_instance(rng, L, C)
+    budget = costs.min(axis=1).sum() * 1.5
+    sol = ilp.solve_lagrangian(values, costs, budget)
+    assert sol.feasible
+    assert sol.gap >= 0.0
+    # dual bound sanity: gap small relative to objective scale
+    assert sol.gap <= abs(sol.value) + 1.0
+
+
+def test_infeasible_raises():
+    values = np.ones((3, 2))
+    costs = np.ones((3, 2)) * 10
+    with pytest.raises(ilp.InfeasibleError):
+        ilp.solve_dp(values, costs, budget=1.0)
+    with pytest.raises(ilp.InfeasibleError):
+        ilp.solve_bruteforce(values, costs, budget=1.0)
+
+
+def test_dp_exact_on_integral_instance():
+    # hand instance with known optimum
+    values = np.asarray([[3.0, 1.0], [3.0, 1.0]])
+    costs = np.asarray([[1.0, 2.0], [1.0, 2.0]])
+    # budget 3: can afford one expensive (cost2) + one cheap (cost1)
+    sol = ilp.solve_dp(values, costs, budget=3.0, bins=64)
+    assert sol.value == 4.0 and sol.cost <= 3.0
+
+
+def test_dual_budget():
+    rng = np.random.default_rng(7)
+    values, costs_a = _rand_instance(rng, 8, 4)
+    costs_b = rng.uniform(0.5, 4.0, (8, 4))
+    budget_a = costs_a.min(axis=1).sum() * 1.6
+    budget_b = costs_b.min(axis=1).sum() * 1.6
+    sol = ilp.solve_mckp_dual(values, costs_a, budget_a, costs_b, budget_b)
+    rows = np.arange(8)
+    assert costs_a[rows, sol.choice].sum() <= budget_a * (1 + 1e-9)
+    assert costs_b[rows, sol.choice].sum() <= budget_b * (1 + 1e-9)
+
+
+def test_search_time_scales():
+    """Paper §4.3: search must be sub-second even at 100+ layers."""
+    import time
+    rng = np.random.default_rng(0)
+    values, costs = _rand_instance(rng, 120, 25)    # 120 layers, 5x5 combos
+    budget = costs.min(axis=1).sum() * 2
+    t0 = time.perf_counter()
+    sol = ilp.solve_dp(values, costs, budget)
+    dt = time.perf_counter() - t0
+    assert sol.feasible
+    assert dt < 5.0

@@ -1,0 +1,147 @@
+"""Paper-core integration: joint indicator training -> extraction -> ILP
+search -> policy execution, plus the Table-6 reversed ablation mechanics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import importance as imp
+from repro.core import search
+from repro.core.policy import MPQPolicy
+from repro.data import SyntheticLM
+from repro.dist.axes import NO_AXES
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+
+
+@pytest.fixture(scope="module")
+def demo():
+    cfg = get_config("limpq-demo").scaled(n_layers=2, d_model=64, n_heads=2,
+                                          n_kv_heads=2, d_ff=256, vocab=256)
+    rng = jax.random.PRNGKey(0)
+    params = lm.init_params(rng, cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    data = SyntheticLM(cfg)
+    batches = [{k: jnp.asarray(v) for k, v in data.batch(s, 4, 64).items()}
+               for s in range(6)]
+    params, hist = imp.train_importance(params, cfg, ctx, batches, lr=0.02,
+                                        freeze_backbone=True)
+    ql = lm.enumerate_qlayers(cfg)
+    ind = imp.extract_indicators(params, cfg, ql)
+    return cfg, params, ctx, ql, ind, batches, hist
+
+
+def test_joint_training_runs_n_plus_1(demo):
+    cfg, *_, hist = demo
+    assert hist[0]["loss_uniform"].shape == (cfg.n_bits,)
+    assert np.isfinite(hist[-1]["loss_random"])
+
+
+def test_freeze_backbone_only_moves_indicators(demo):
+    """With freeze_backbone, weights stay put; banks move."""
+    cfg, params, ctx, ql, ind, batches, _ = demo
+    rng = jax.random.PRNGKey(1)
+    p0 = lm.init_params(rng, cfg)
+    opt = imp.importance_optimizer(0.05, freeze_backbone=True)
+    step = jax.jit(imp.make_importance_step(cfg, ctx, opt, NO_AXES,
+                                            remat=False))
+    p1, _, _ = step(p0, opt.init(p0), batches[0], jax.random.PRNGKey(2))
+    w0 = p0["body"]["0"]["wq"]["w"]
+    w1 = p1["body"]["0"]["wq"]["w"]
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
+    s0 = p0["body"]["0"]["wq"]["s_w"]
+    s1 = p1["body"]["0"]["wq"]["s_w"]
+    assert not np.allclose(np.asarray(s0), np.asarray(s1))
+
+
+def test_indicator_monotonicity(demo):
+    """Paper §3.3.2: scale value grows as bit-width shrinks (s(2b)>s(6b))."""
+    cfg, _, _, ql, ind, *_ = demo
+    frac_w = np.mean([ind[q.name]["w"][0] > ind[q.name]["w"][-1] for q in ql])
+    frac_a = np.mean([ind[q.name]["a"][0] > ind[q.name]["a"][-1] for q in ql])
+    assert frac_w >= 0.9
+    assert frac_a >= 0.9
+
+
+def test_search_respects_budget(demo):
+    cfg, _, _, ql, ind, *_ = demo
+    for level in (3, 4):
+        budget = search.bitops_budget_for_uniform(ql, level)
+        res = search.search_policy(ql, ind, cfg.bits, alpha=1.0,
+                                   bitops_budget=budget)
+        assert res.bitops <= budget * (1 + 1e-9)
+        avg_w, avg_a = res.policy.avg_bits()
+        assert 2 <= avg_w <= 6 and 2 <= avg_a <= 6
+
+
+def test_search_size_constraint(demo):
+    cfg, _, _, ql, ind, *_ = demo
+    size_budget = search.size_budget_for_rate(ql, fp_bits=32, rate=10.0)
+    res = search.search_policy(ql, ind, cfg.bits, alpha=1.0,
+                               size_budget_bytes=size_budget)
+    assert res.size_bytes <= size_budget * (1 + 1e-9)
+
+
+def test_reversed_assignment_mechanics(demo):
+    """Table-6 ablation: `reverse=True` rank-mirrors the indicator table
+    (sensitive layers perceived as insensitive) under the same budget."""
+    cfg, _, _, ql, ind, *_ = demo
+    # mirror anti-correlates the per-layer scores
+    rev_ind = search.reverse_indicators(ql, ind)
+    names = [q.name for q in ql]
+    fwd_scores = np.asarray([ind[n]["w"].sum() + ind[n]["a"].sum()
+                             for n in names])
+    rev_scores = np.asarray([rev_ind[n]["w"].sum() + rev_ind[n]["a"].sum()
+                             for n in names])
+    ra = np.argsort(np.argsort(fwd_scores)).astype(float)
+    rb = np.argsort(np.argsort(rev_scores)).astype(float)
+    ra -= ra.mean(); rb -= rb.mean()
+    rho = (ra * rb).sum() / np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    assert rho < -0.99                       # perfectly anti-correlated
+
+    budget = search.bitops_budget_for_uniform(ql, 4)
+    rev = search.search_policy(ql, ind, cfg.bits, bitops_budget=budget,
+                               reverse=True)
+    assert rev.bitops <= budget * (1 + 1e-9)
+    assert rev.policy.meta["kind"] == "ilp-reversed"
+
+
+def test_policy_roundtrip(tmp_path, demo):
+    cfg, _, _, ql, ind, *_ = demo
+    budget = search.bitops_budget_for_uniform(ql, 3)
+    res = search.search_policy(ql, ind, cfg.bits, bitops_budget=budget)
+    p = tmp_path / "policy.json"
+    res.policy.save(str(p))
+    loaded = MPQPolicy.load(str(p))
+    assert loaded.w_bits == res.policy.w_bits
+    assert loaded.a_bits == res.policy.a_bits
+
+
+def test_policy_execution_consistent(demo):
+    """bits_from_policy must route exactly the policy's bits: executing a
+    uniform-via-policy assignment == bits_uniform."""
+    cfg, params, ctx, ql, _, batches, _ = demo
+    uni_policy = MPQPolicy.uniform(ql, 4)
+    bits_p = lm.bits_from_policy(cfg, uni_policy, ql)
+    bits_u = lm.bits_uniform(cfg, list(cfg.bits).index(4))
+    l1, _ = lm.loss_fn(params, cfg, batches[0], bits_p, ctx, NO_AXES,
+                       remat=False)
+    l2, _ = lm.loss_fn(params, cfg, batches[0], bits_u, ctx, NO_AXES,
+                       remat=False)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_hessian_baseline_plugs_in(demo):
+    """HAWQ-style table must flow through the same search machinery."""
+    from repro.core import hessian
+    cfg, params, ctx, ql, _, batches, _ = demo
+    table = hessian.hawq_sensitivities(params, cfg, batches[0],
+                                       jax.random.PRNGKey(3), qlayers=ql,
+                                       n_samples=2)
+    assert set(table) == {q.name for q in ql}
+    budget = search.bitops_budget_for_uniform(ql, 4)
+    res = search.search_policy(ql, table, cfg.bits, alpha=1.0,
+                               bitops_budget=budget)
+    assert res.bitops <= budget * (1 + 1e-9)

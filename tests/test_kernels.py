@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU): shape/dtype
+sweeps + gradient equivalence with the core STE composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizer as qz
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(64, 130), (7, 257), (300,), (4, 33, 65),
+                                   (1, 1), (513,)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_fake_quant_forward(nprng, shape, bits):
+    v = jnp.asarray(nprng.standard_normal(shape), jnp.float32)
+    s = jnp.asarray(0.07, jnp.float32)
+    qmin, qmax = qz.bit_range(bits, True)
+    out = ops.fake_quant(v, s, float(qmin), float(qmax))
+    expect = ref.fake_quant_ref(v, s, qmin, qmax)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fake_quant_dtypes(nprng, dtype):
+    v = jnp.asarray(nprng.standard_normal((32, 256)), dtype)
+    s = jnp.asarray(0.1, jnp.float32)
+    out = ops.fake_quant(v, s, -8.0, 7.0)
+    # the kernel divides/rounds in f32 regardless of storage dtype, so the
+    # oracle must too (bf16-division boundary cases differ by one grid step)
+    expect = ref.fake_quant_ref(v.astype(jnp.float32), s, -8, 7).astype(dtype)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=0)
+
+
+def test_fake_quant_grads_match_core(nprng):
+    """Kernel custom-vjp == autodiff of the STE composition in core."""
+    v = jnp.asarray(nprng.standard_normal((48, 96)), jnp.float32)
+    s = jnp.asarray(0.09, jnp.float32)
+    qmin, qmax = -8.0, 7.0
+
+    def f_kernel(v, s):
+        return jnp.sum(jnp.cos(ops.fake_quant(v, s, qmin, qmax)))
+
+    def f_core(v, s):
+        return jnp.sum(jnp.cos(qz.fake_quant(v, s, qmin, qmax)))
+
+    gv1, gs1 = jax.grad(f_kernel, argnums=(0, 1))(v, s)
+    gv2, gs2 = jax.grad(f_core, argnums=(0, 1))(v, s)
+    np.testing.assert_allclose(np.asarray(gv1), np.asarray(gv2), atol=1e-6)
+    np.testing.assert_allclose(float(gs1), float(gs2), rtol=1e-3)
+
+
+def test_fake_quant_bwd_vs_ref_formula(nprng):
+    v = jnp.asarray(nprng.standard_normal((33, 65)) * 3, jnp.float32)
+    s = jnp.asarray(0.2, jnp.float32)
+    g = jnp.asarray(nprng.standard_normal((33, 65)), jnp.float32)
+    _, vjp = jax.vjp(lambda v_, s_: ops.fake_quant(v_, s_, -4.0, 3.0), v, s)
+    dv, ds = vjp(g)
+    dv_ref, ds_ref = ref.fake_quant_grads_ref(v, s, g, -4, 3)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_ref), atol=1e-6)
+    np.testing.assert_allclose(float(ds), float(ds_ref), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mkn", [(64, 128, 64), (100, 300, 50),
+                                 (257, 513, 129), (8, 1024, 16), (1, 128, 1)])
+def test_quant_matmul_exact(nprng, mkn):
+    M, K, N = mkn
+    xq = jnp.asarray(nprng.integers(-127, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(nprng.integers(-127, 128, (K, N)), jnp.int8)
+    sx, sw = jnp.float32(0.02), jnp.float32(0.005)
+    out = ops.quant_matmul(xq, wq, sx, sw, blocks=(64, 64, 128))
+    expect = ref.quant_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=0,
+                               atol=0)
+
+
+def test_quant_matmul_matches_fake_quant_path(nprng):
+    """The deployment contract: int8 execution == fake-quant training graph
+    when bits <= 8 (paper's deployability argument, TPU form)."""
+    K, N = 96, 64
+    w = jnp.asarray(nprng.standard_normal((K, N)), jnp.float32)
+    x = jnp.asarray(nprng.standard_normal((8, K)), jnp.float32)
+    s_w = jnp.float32(0.05)
+    s_x = jnp.float32(0.11)
+    qmin, qmax = qz.bit_range(4, True)
+    # training graph: fake-quant both, f32 matmul
+    ref_out = qz.fake_quant(x, s_x, qmin, qmax) @ qz.fake_quant(w, s_w, qmin, qmax)
+    # deployment: int8 codes + fused kernel
+    xq = ops.quantize_int8(x, s_x, bits=4)
+    wq = ops.quantize_int8(w, s_w, bits=4)
+    out = ops.quant_matmul(xq, wq, s_x, s_w, blocks=(8, 96, 64))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv wkv
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bshd", [(2, 64, 2, 8), (1, 96, 4, 16),
+                                  (3, 32, 1, 32)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_wkv_kernel_vs_ref(nprng, bshd, chunk):
+    B, S, H, hd = bshd
+    if S % chunk:
+        pytest.skip("S % chunk != 0")
+    r, k, v = (jnp.asarray(nprng.standard_normal((B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    lw = -jnp.asarray(nprng.uniform(0.01, 2.0, (B, S, H, hd)), jnp.float32)
+    u = jnp.asarray(nprng.standard_normal((H, hd)), jnp.float32) * 0.5
+    y = ops.wkv(r, k, v, lw, u, chunk=chunk)
+    ye = ref.wkv_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_wkv_kernel_strong_decay(nprng):
+    B, S, H, hd = 1, 32, 2, 8
+    r, k, v = (jnp.asarray(nprng.standard_normal((B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    lw = jnp.full((B, S, H, hd), -8.0)
+    u = jnp.zeros((H, hd), jnp.float32)
+    y = ops.wkv(r, k, v, lw, u, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention forward kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_flash_fwd_kernel_vs_direct(nprng, causal, window):
+    from repro.models import attention as attn
+    B, S, H, KV, hd = 2, 256, 4, 2, 32
+    G = H // KV
+    q = jnp.asarray(nprng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(nprng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(nprng.standard_normal((B, S, KV, hd)), jnp.float32)
+    qr = q.reshape(B, S, KV, G, hd) * hd ** -0.5
+    out, lse = ops.flash_fwd(qr, k, v, causal=causal, window=window,
+                             q_block=64, kv_block=64)
+    pos = jnp.arange(S)
+    ref_out = attn.direct_attention(q, k, v, pos, pos, causal=causal,
+                                    window=window)
+    np.testing.assert_allclose(np.asarray(out.reshape(B, S, H, hd)),
+                               np.asarray(ref_out), atol=2e-5, rtol=2e-5)
+    # lse must match the pure-JAX fwd (it feeds the recompute backward)
+    _, lse_ref = attn._flash_fwd_lse(qr, k, v, causal=causal, window=window,
+                                     q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=1e-5, rtol=1e-5)

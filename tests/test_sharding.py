@@ -1,0 +1,142 @@
+"""Partition rules: divisibility fallbacks and spec validity per arch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.dist import sharding
+from repro.models import lm
+
+
+class FakeMesh:
+    """Axis-name/shape stand-in (tests run on 1 device; specs are pure)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as _np
+        self.devices = _np.empty(shape)
+        self.shape = dict(zip(names, shape))
+
+
+MESH_1POD = FakeMesh((16, 16), ("data", "model"))
+MESH_2POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axes(cfg, mesh=MESH_1POD):
+    return sharding.make_axes_for(cfg, mesh)
+
+
+def test_divisibility_fallbacks():
+    a_star = _axes(get_config("starcoder2-7b"))
+    assert a_star.th == ()               # 36 heads don't divide 16
+    a_yi = _axes(get_config("yi-9b"))
+    assert a_yi.th == ("model",)         # 32 heads divide
+    a_hub = _axes(get_config("hubert-xlarge"))
+    assert a_hub.tv == ()                # vocab 504 doesn't divide
+    a_rg = _axes(get_config("recurrentgemma-2b"))
+    assert a_rg.th == ()                 # 10 heads
+    assert a_rg.tv == ("model",)         # 256000 divides
+
+
+def test_moe_expert_vs_ffn_sharding():
+    a_ds = _axes(get_config("deepseek-moe-16b"))
+    assert a_ds.ep == ("model",)         # 64 experts / 16
+    assert a_ds.mtp == ()
+    a_mx = _axes(get_config("mixtral-8x7b"))
+    assert a_mx.ep == ()                 # 8 experts don't divide 16
+    assert a_mx.mtp == ("model",)        # d_ff 14336 does
+
+
+def test_multipod_dp_axes():
+    a = _axes(get_config("yi-9b"), MESH_2POD)
+    assert a.dp == ("pod", "data")
+    assert a.dp_size == 32
+    assert a.tp_size == 16
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divide_shapes(arch):
+    """Every sharded dim must actually divide by the axis size."""
+    cfg = get_config(arch)
+    axes = _axes(cfg)
+    params_shape = jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = sharding.param_specs(cfg, params_shape, axes)
+
+    def check(leaf, spec):
+        assert isinstance(spec, P)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            ax_names = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([MESH_1POD.shape[a] for a in ax_names]))
+            assert dim % size == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, params_shape, specs,
+                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_projection_rules():
+    cfg = get_config("yi-9b")
+    axes = _axes(cfg)
+    fn = sharding.param_spec_fn(cfg, axes)
+    # column-parallel: out dim sharded
+    assert fn("body/0/wq/w", (48, 4096, 4096)) == P(None, None, ("model",))
+    assert fn("body/0/mlp_wi/w", (48, 4096, 11008)) == P(None, None, ("model",))
+    # row-parallel: in dim sharded
+    assert fn("body/0/wo/w", (48, 4096, 4096)) == P(None, ("model",), None)
+    assert fn("body/0/mlp_wo/w", (48, 11008, 4096)) == P(None, ("model",), None)
+    # banks / norms replicate
+    assert fn("body/0/wq/s_w", (48, 5)) == P(None, None)
+    assert fn("body/0/norm1/scale", (48, 4096)) == P(None, None)
+    # vocab-sharded embedding
+    assert fn("embed/w", (64000, 4096)) == P(("model",), None)
+
+
+def test_moe_param_rules():
+    cfg = get_config("deepseek-moe-16b")
+    axes = _axes(cfg)
+    fn = sharding.param_spec_fn(cfg, axes)
+    # expert-parallel: expert dim sharded, in/out replicated
+    assert fn("body/0/moe/wi/w", (27, 64, 2048, 1408)) == \
+        P(None, ("model",), None, None)
+    cfg2 = get_config("mixtral-8x7b")
+    fn2 = sharding.param_spec_fn(cfg2, _axes(cfg2))
+    # ffn-parallel fallback: per-expert d_ff sharded
+    assert fn2("body/0/moe/wi/w", (32, 8, 4096, 14336)) == \
+        P(None, None, None, ("model",))
+    assert fn2("body/0/moe/wo/w", (32, 8, 14336, 4096)) == \
+        P(None, None, ("model",), None)
+
+
+def test_rwkv_rglru_rules():
+    cfg = get_config("rwkv6-7b")
+    fn = sharding.param_spec_fn(cfg, _axes(cfg))
+    assert fn("body/0/wg/w", (32, 4096, 4096)) == P(None, None, ("model",))
+    assert fn("body/0/cm_wv/w", (32, 14336, 4096)) == P(None, ("model",), None)
+    cfg2 = get_config("recurrentgemma-2b")
+    fn2 = sharding.param_spec_fn(cfg2, _axes(cfg2))
+    assert fn2("body/0/rg/wx/w", (8, 2560, 2560)) == P(None, None, ("model",))
+    assert fn2("body/0/rg/wo/w", (8, 2560, 2560)) == P(None, ("model",), None)
+
+
+def test_zero_sharding_widens():
+    cfg = get_config("yi-9b")
+    axes = _axes(cfg)
+    params_shape = jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    z = sharding.zero_sharded_specs(cfg, params_shape, axes)
+    spec = z["body"]["0"]["mlp_wi"]["w"]
+    # base P(None,None,model); ZeRO adds data on the largest free dim (4096)
+    assert spec == P(None, ("data",), ("model",))
+
+
+def test_batch_specs_b1_replicates():
+    cfg = get_config("rwkv6-7b")
+    axes = _axes(cfg)
+    one = jax.ShapeDtypeStruct((1, 524288), jnp.int32)
+    spec = sharding.batch_specs(cfg, one, axes)
+    assert spec == P(None, None)
+    many = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+    assert sharding.batch_specs(cfg, many, axes) == P(("data",), None)
