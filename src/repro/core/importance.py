@@ -59,7 +59,6 @@ def make_importance_step(cfg: ModelConfig, ctx: QuantContext,
     def step(params, opt_state, batch, rng):
         grads_sum = None
         losses = []
-        n_passes = n + (1 if include_random_pass else 0)
         for k in range(n):                         # uniform-bit passes
             l, g = jax.value_and_grad(loss_of)(params, batch,
                                                lm.bits_uniform(cfg, k))
@@ -72,7 +71,22 @@ def make_importance_step(cfg: ModelConfig, ctx: QuantContext,
             grads_sum = jax.tree.map(jnp.add, grads_sum, g)
         else:
             l_r = jnp.zeros(())
-        grads = jax.tree.map(lambda g: g / n_passes, grads_sum)
+        # aggregate the n+1 gradients into one atomic update (§3.4):
+        # backbone weights receive signal from every pass -> average over
+        # all of them. A bank ENTRY is selected by its own uniform pass
+        # plus at most the random pass, so the banks are normalized by
+        # that upper bound (2) instead — a deliberately conservative
+        # fixed constant, not a per-entry average: a flat 1/(n+1) would
+        # dilute the indicator gradients ~(n+1)/2-fold relative to their
+        # lr, while the exact expectation (1 + 1/n) over-amplifies the
+        # entries the random pass did not actually select
+        n_passes = n + (1 if include_random_pass else 0)
+        bank_passes = 2 if include_random_pass else 1
+        grads = jax.tree_util.tree_map_with_path(
+            lambda path, g: g / (bank_passes
+                                 if optim.indicator_only_mask(path, g)
+                                 else n_passes),
+            grads_sum)
 
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = optim.apply_updates(params, updates)

@@ -1,0 +1,20 @@
+"""Distributed-execution layer.
+
+Five small modules with one responsibility each:
+
+  axes        — logical-axis bundle (``MeshAxes``) + the ``NO_AXES``
+                single-device default every model/step function accepts
+  sharding    — per-arch partition rules with divisibility fallbacks
+  collectives — gradient compression (int8 + error feedback) and
+                shard_map matmul/collective overlap kernels
+  hlo         — compiled-HLO cost analyzer (trip-count-scaled flops,
+                HBM bytes, collective wire bytes)
+  roofline    — three-term (compute / HBM / ICI) step-time model fed by
+                ``hlo.analyze`` outputs
+
+The model code never imports a mesh directly: it receives a ``MeshAxes``
+and calls ``axes.shard(x, "dp", "sp", None)`` — a no-op under ``NO_AXES``,
+a ``with_sharding_constraint`` under a real mesh.
+"""
+from repro.dist import axes, collectives, hlo, roofline, sharding  # noqa: F401
+from repro.dist.axes import NO_AXES, MeshAxes  # noqa: F401

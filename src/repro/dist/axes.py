@@ -1,0 +1,81 @@
+"""Logical sharding axes.
+
+``MeshAxes`` maps *logical* axis names (what the model code thinks in:
+data, sequence, heads, vocab, experts) to *mesh* axis names (what the
+hardware mesh provides: ``data`` / ``model`` / ``pod``). Model code calls
+
+    x = axes.shard(x, "dp", "sp", None)
+
+with one logical name (or None) per array dimension. Under ``NO_AXES``
+this is the identity, so every step function runs unmodified on one
+device; under a real mesh it becomes a ``with_sharding_constraint`` that
+pins the intermediate to the arch's partition layout.
+
+Construction goes through ``repro.dist.sharding.make_axes_for`` which
+applies the per-arch divisibility fallbacks — this module holds only the
+dataclass and the identity default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A logical axis resolves to a tuple of mesh axis names: ("model",),
+# ("pod", "data"), or () when the arch can't use the axis (fallback).
+Axes = Tuple[str, ...]
+
+LOGICAL_AXES = ("dp", "sp", "tp", "th", "tv", "ep", "mtp")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Resolved logical->mesh axis assignment for one (arch, mesh) pair.
+
+    dp   data parallel (batch / token groups);  ("pod", "data") multi-pod
+    sp   sequence parallel (norm/embed regions between matmuls)
+    tp   tensor parallel feature dim (d_ff activations)
+    th   tensor parallel attention heads
+    tv   tensor parallel vocab (logits / embedding)
+    ep   expert parallel (MoE routed experts)
+    mtp  MoE per-expert d_ff fallback when experts don't divide the mesh
+    """
+    mesh: Optional[Any] = None
+    dp: Axes = ()
+    sp: Axes = ()
+    tp: Axes = ()
+    th: Axes = ()
+    tv: Axes = ()
+    ep: Axes = ()
+    mtp: Axes = ()
+    dp_size: int = 1
+    tp_size: int = 1
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def resolve(self, name: Optional[str]) -> Optional[Axes]:
+        """Logical name -> mesh axes tuple (None if unused/unsupported)."""
+        if name is None:
+            return None
+        ax = getattr(self, name)
+        return ax if ax else None
+
+    def spec(self, *names: Optional[str]) -> P:
+        """PartitionSpec with one logical name (or None) per dimension."""
+        return P(*(self.resolve(n) for n in names))
+
+    def shard(self, x: jax.Array, *names: Optional[str]) -> jax.Array:
+        """Constrain ``x``'s sharding; identity when no mesh is bound."""
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*names)))
+
+
+# Single-device default: every logical axis resolves to nothing and
+# ``shard`` is the identity. Safe to close over in jit on any backend.
+NO_AXES = MeshAxes()

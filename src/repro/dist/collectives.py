@@ -1,0 +1,138 @@
+"""Compressed collectives and matmul/collective overlap kernels.
+
+Gradient compression (cross-pod DCN traffic):
+  * ``compress_int8`` — per-tensor symmetric int8 with a single f32 scale
+    (s = max|g| / 127), worst-case elementwise error s/2.
+  * ``ef_compress_tree`` / ``ef_decompress_tree`` — error-feedback
+    compression over a gradient pytree. The residual carries the signal
+    the int8 grid dropped, so the conservation invariant
+        dequant(q) + new_residual == g + old_residual
+    holds exactly (up to f32 rounding) and accumulated compressed
+    gradients stay within one quantization step of the true sum.
+
+Overlap kernels (shard_map, portable to any backend with a mesh):
+  * ``psum_matmul`` — contraction-sharded matmul + ring all-reduce via
+    collective-permute (n-1 ppermute+add steps), the decomposition XLA
+    can interleave with neighbouring compute.
+  * ``ag_matmul_rotating`` — all-gather matmul: the contraction shards of
+    ``x`` rotate around the ring while each device multiplies the chunk
+    it currently holds against the matching row block of its local
+    output-column shard — the gather is hidden behind the matmuls.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+INT8_MAX = 127.0
+
+
+# ---------------------------------------------------------------------------
+# int8 compression + error feedback
+# ---------------------------------------------------------------------------
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric quantization. Returns (q int8, scale f32[])."""
+    g = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / INT8_MAX, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(g / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads: Tree, residual: Optional[Tree]
+                     ) -> Tuple[Tree, Tree, Tree]:
+    """Error-feedback compress a gradient pytree.
+
+    residual=None starts from zero. Returns (q_tree, scale_tree,
+    new_residual_tree); invariant per leaf:
+        decompress(q, s) + new_residual == g + residual.
+    """
+    if residual is None:
+        residual = jax.tree.map(jnp.zeros_like, grads)
+    err = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    qs = jax.tree.map(compress_int8, err)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda e, qq, ss: e - decompress_int8(qq, ss),
+                           err, q, s)
+    return q, s, new_res
+
+
+def ef_decompress_tree(q: Tree, s: Tree) -> Tree:
+    return jax.tree.map(decompress_int8, q, s)
+
+
+# ---------------------------------------------------------------------------
+# shard_map overlap kernels
+# ---------------------------------------------------------------------------
+def _ring_allreduce(partial: jax.Array, axis: str, n: int) -> jax.Array:
+    """Ring all-reduce via n-1 collective-permute + add steps."""
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = partial
+    for _ in range(n - 1):
+        acc = jax.lax.ppermute(acc, axis, perm) + partial
+    return acc
+
+
+def psum_matmul(x: jax.Array, w: jax.Array, mesh, axis: str) -> jax.Array:
+    """x @ w with the contraction dim sharded over ``axis``.
+
+    Each device multiplies its (cols-of-x, rows-of-w) chunk, then the
+    partial products ring-reduce via collective-permute — the ppermute
+    chain is overlappable with adjacent compute, unlike a monolithic
+    all-reduce.
+    """
+    n = int(dict(mesh.shape)[axis])
+
+    def body(xl, wl):
+        return _ring_allreduce(xl @ wl, axis, n)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(axis, None)),
+                     out_specs=P(None, None), check_rep=False)(x, w)
+
+
+def ag_matmul_rotating(x: jax.Array, w: jax.Array, mesh, axis: str) -> jax.Array:
+    """x @ w with x contraction-sharded and w output-column-sharded.
+
+    Instead of all-gathering x up front, the x shards rotate around the
+    ring; at step t a device holds chunk (idx - t) mod n and multiplies
+    it against the matching row block of its local w columns. After n
+    steps every device has its full output-column block and the gather
+    cost is hidden behind the chunked matmuls.
+    """
+    n = int(dict(mesh.shape)[axis])
+    k = x.shape[-1]
+    assert k % n == 0, (k, n)
+    chunk = k // n
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(xl, wl):
+        # xl: (M, k/n) — this device's contraction chunk
+        # wl: (k, N/n) — all contraction rows of the local output columns
+        idx = jax.lax.axis_index(axis)
+        out = jnp.zeros((xl.shape[0], wl.shape[1]), jnp.float32)
+        for t in range(n):
+            chunk_id = (idx - t) % n
+            w_rows = jax.lax.dynamic_slice_in_dim(wl, chunk_id * chunk,
+                                                  chunk, axis=0)
+            out = out + xl.astype(jnp.float32) @ w_rows.astype(jnp.float32)
+            if t != n - 1:
+                xl = jax.lax.ppermute(xl, axis, perm)
+        return out
+
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(P(None, axis), P(None, axis)),
+                    out_specs=P(None, axis), check_rep=False)(x, w)
+    return out.astype(x.dtype)

@@ -1,0 +1,522 @@
+"""Compiled-HLO cost analyzer.
+
+``analyze(text)`` parses an XLA post-optimization HLO dump and returns a
+``HloCost`` with
+
+  flops        — total flops, matching XLA's HloCostAnalysis op-for-op on
+                 while-free graphs (the calibration contract in
+                 tests/test_hlo.py), but with while-loop bodies scaled by
+                 their known trip counts — XLA reports one iteration,
+                 which under-counts a scanned layer stack by ``repeats``x
+  dot_flops    — the dot/conv subset (the "useful" math for MFU)
+  bytes_hbm    — HBM traffic estimate (fusion-boundary semantics: fused
+                 producers are free, slices read the slice not the
+                 operand), also trip-count-scaled
+  wire_bytes   — collective bytes on the wire per participating device,
+                 using the standard ring-algorithm cost model
+  by_collective / n_collectives / trip_counts — breakdowns for reports
+
+The parser handles the real printer grammar: tuple types with
+``/*index=N*/`` comments, typed operands, nested computations
+(fusion ``calls=``, ``to_apply=``, while ``condition=``/``body=``), and
+both replica-group formats (``{{0,1},{2,3}}`` and iota ``[2,4]<=[8]``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# result type
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_hbm: float = 0.0
+    wire_bytes: float = 0.0
+    n_collectives: int = 0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    def _add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.dot_flops += mult * other.dot_flops
+        self.transcendentals += mult * other.transcendentals
+        self.bytes_hbm += mult * other.bytes_hbm
+        self.wire_bytes += mult * other.wire_bytes
+        self.n_collectives += int(mult * other.n_collectives)
+        for k, v in other.by_collective.items():
+            self.by_collective[k] = self.by_collective.get(k, 0.0) + mult * v
+        self.trip_counts.extend(other.trip_counts)
+
+
+# --------------------------------------------------------------------------
+# shape utilities
+# --------------------------------------------------------------------------
+_ELEM_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "bf16": 2,
+    "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0, "tuple": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,<=\s]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> float:
+        return self.elems * _ELEM_BYTES.get(self.dtype, 4)
+
+
+def _parse_shapes(type_str: str) -> List[Shape]:
+    """All array shapes inside a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _ELEM_BYTES:
+            continue
+        dim_list = tuple(int(re.sub(r"[^0-9]", "", d) or 0)
+                         for d in dims.split(",") if d.strip()) \
+            if dims.strip() else ()
+        out.append(Shape(dtype, dim_list))
+    return out
+
+
+def _shapes_bytes(shapes: List[Shape]) -> float:
+    return sum(s.bytes for s in shapes)
+
+
+def _shapes_elems(shapes: List[Shape]) -> int:
+    return sum(s.elems for s in shapes)
+
+
+# --------------------------------------------------------------------------
+# parsing
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out: List[Shape]
+    operands: List[str]            # referenced value names; shapes are
+                                   # resolved via _Analyzer's defs table
+    attrs: str
+    is_root: bool
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index one past the paren group opening at s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on top-level commas (ignoring (), {} and [] nesting)."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    is_root, name, rhs = bool(m.group(1)), m.group(2), m.group(3).strip()
+    # type: either a balanced tuple "( ... )" or a single token
+    if rhs.startswith("("):
+        end = _balanced(rhs, 0)
+        type_str, rest = rhs[:end], rhs[end:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp + 1:].lstrip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    op_end = _balanced(rest, om.end() - 1)
+    operand_str = rest[om.end():op_end - 1]
+    attrs = rest[op_end:].lstrip(", ")
+    operands = []
+    for tok in _split_top(operand_str):
+        ref = tok.split()[-1] if tok.split() else ""
+        operands.append(ref.lstrip("%"))
+    return Instr(name=name, opcode=opcode, out=_parse_shapes(type_str),
+                 operands=operands, attrs=attrs,
+                 is_root=is_root)
+
+
+def _parse_module(text: str, pre_stripped: bool = False) -> Dict[str, List[Instr]]:
+    if not pre_stripped:
+        text = _COMMENT_RE.sub("", text)
+    comps: Dict[str, List[Instr]] = {}
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//") or line.startswith("HloModule"):
+            continue
+        if current is None:
+            h = _HEADER_RE.match(line)
+            if h:
+                current = h.group(2)
+                comps[current] = []
+            continue
+        if line == "}" or line.startswith("}"):
+            current = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[current].append(ins)
+    return comps
+
+
+# --------------------------------------------------------------------------
+# per-op cost rules
+# --------------------------------------------------------------------------
+# Elementwise opcodes that count 1 flop per output element (XLA's table).
+_EW_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "compare", "select", "and", "or", "xor", "not",
+    "clamp", "convert", "is-finite", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "remainder", "clz", "popcnt", "stochastic-convert",
+}
+# 1 transcendental per output element; zero flops.
+_EW_TRANS = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "logistic", "cosine", "sine", "tan", "sqrt", "rsqrt", "cbrt", "tanh",
+    "power", "atan2", "erf", "expm1", "log1p",
+}
+# free data movement / metadata
+_FREE = {
+    "parameter", "constant", "iota", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "transpose", "after-all", "partition-id", "replica-id",
+    "rng-get-and-update-state", "copy-start", "copy-done", "bitcast-convert",
+    "opt-barrier",
+}
+# collectives and their ring wire-bytes model: f(group, in_bytes, out_bytes)
+_COLLECTIVES = {
+    "all-reduce": lambda g, i, o: 2.0 * (g - 1) / g * o,
+    "all-gather": lambda g, i, o: (g - 1) / g * o,
+    "reduce-scatter": lambda g, i, o: (g - 1) / g * i,
+    "all-to-all": lambda g, i, o: (g - 1) / g * o,
+    "collective-permute": lambda g, i, o: float(o),
+    "collective-broadcast": lambda g, i, o: float(o),
+}
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*([0-9]+)")
+_DIMS_RE = {
+    "lhs_contracting": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "rhs_contracting": re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}"),
+}
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",") if x.strip()]
+        return dims[-1] if dims else default
+    return default
+
+
+def _int_list(rx: re.Pattern, attrs: str) -> List[int]:
+    m = rx.search(attrs)
+    if not m or not m.group(1).strip():
+        return []
+    return [int(x) for x in m.group(1).split(",") if x.strip()]
+
+
+def _param_utilization(users: List["Instr"], pname: str,
+                       defs: Dict[str, List[Shape]]) -> Optional[float]:
+    """Bytes a fused computation actually reads of parameter ``pname``.
+
+    slice/dynamic-slice/gather consumers read their output size; a
+    dynamic-update-slice with the parameter as the updated buffer reads
+    the update region (in-place aliasing). Any other consumer touches the
+    whole parameter -> return None (caller uses the full size).
+    """
+    if not users:
+        return None
+    total = 0.0
+    for ci in users:
+        if (ci.opcode in ("slice", "dynamic-slice", "gather")
+                and ci.operands and ci.operands[0] == pname):
+            total += _shapes_bytes(ci.out)
+        elif (ci.opcode == "dynamic-update-slice"
+              and ci.operands and ci.operands[0] == pname
+              and len(ci.operands) > 1):
+            total += _shapes_bytes(defs.get(ci.operands[1], []))
+        else:
+            return None
+    return total
+
+
+class _Analyzer:
+    def __init__(self, comps: Dict[str, List[Instr]], num_partitions: int):
+        self.comps = comps
+        self.num_partitions = num_partitions
+        self.defs: Dict[str, Dict[str, List[Shape]]] = {
+            c: {i.name: i.out for i in instrs}
+            for c, instrs in comps.items()
+        }
+        self._memo: Dict[str, HloCost] = {}
+
+    # -- operand shape lookup ------------------------------------------------
+    def _operand_shapes(self, comp: str, ins: Instr) -> List[List[Shape]]:
+        table = self.defs.get(comp, {})
+        return [table.get(ref, []) for ref in ins.operands]
+
+    # -- computations --------------------------------------------------------
+    def comp_cost(self, name: str) -> HloCost:
+        name = name.lstrip("%")
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = HloCost()          # cycle guard
+        total = HloCost()
+        for ins in self.comps.get(name, []):
+            total._add(self.instr_cost(name, ins))
+        self._memo[name] = total
+        return total
+
+    def _callee(self, attrs: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+        return m.group(1) if m else None
+
+    def _fusion_in_bytes(self, callee: Optional[str], ins: Instr,
+                         opnds: List[List[Shape]]) -> float:
+        """Operand bytes of a fusion with slice-utilization awareness."""
+        body = self.comps.get(callee or "", [])
+        params: Dict[int, Instr] = {}
+        for ci in body:
+            if ci.opcode == "parameter" and ci.operands:
+                try:
+                    params[int(ci.operands[0])] = ci
+                except ValueError:
+                    pass
+        defs = self.defs.get(callee or "", {})
+        total = 0.0
+        for pos, shapes in enumerate(opnds):
+            full = _shapes_bytes(shapes)
+            p = params.get(pos)
+            if p is not None:
+                users = [ci for ci in body if p.name in ci.operands]
+                util = _param_utilization(users, p.name, defs)
+                if util is not None:
+                    full = util
+            total += full
+        return total
+
+    def _fusion_out_bytes(self, callee: Optional[str], out_b: float) -> float:
+        """A fusion rooted in dynamic-update-slice writes in place: only
+        the update region costs HBM traffic, not the aliased buffer."""
+        body = self.comps.get(callee or "", [])
+        defs = self.defs.get(callee or "", {})
+        root = next((ci for ci in body if ci.is_root), None)
+        if (root is not None and root.opcode == "dynamic-update-slice"
+                and len(root.operands) > 1):
+            return _shapes_bytes(defs.get(root.operands[1], []))
+        return out_b
+
+    # -- instructions --------------------------------------------------------
+    def instr_cost(self, comp: str, ins: Instr) -> HloCost:
+        c = HloCost()
+        op = ins.opcode
+        out_b = _shapes_bytes(ins.out)
+        out_e = _shapes_elems(ins.out)
+        opnds = self._operand_shapes(comp, ins)
+        in_b = sum(_shapes_bytes(s) for s in opnds)
+
+        if op in _FREE:
+            return c
+
+        base = re.sub(r"-(start|done)$", "", op)
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):       # counted at the matching -start
+                return c
+            g = _group_size(ins.attrs, default=max(self.num_partitions, 1))
+            wire = _COLLECTIVES[base](max(g, 1), in_b, out_b)
+            c.wire_bytes += wire
+            c.n_collectives += 1
+            c.by_collective[base] = c.by_collective.get(base, 0.0) + wire
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op == "dot":
+            lhs = opnds[0][0] if opnds and opnds[0] else None
+            contract = 1
+            for d in _int_list(_DIMS_RE["lhs_contracting"], ins.attrs):
+                if lhs and d < len(lhs.dims):
+                    contract *= lhs.dims[d]
+            flops = 2.0 * out_e * contract
+            c.flops += flops
+            c.dot_flops += flops
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op == "convolution":
+            kernel = opnds[1][0] if len(opnds) > 1 and opnds[1] else None
+            k_elems = kernel.elems if kernel else 1
+            out_feat = ins.out[0].dims[-1] if ins.out and ins.out[0].dims else 1
+            flops = 2.0 * out_e * max(k_elems // max(out_feat, 1), 1)
+            c.flops += flops
+            c.dot_flops += flops
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op == "fusion" or op == "call":
+            callee = self._callee(ins.attrs, "calls")
+            if callee:
+                sub = self.comp_cost(callee)
+                c.flops += sub.flops
+                c.dot_flops += sub.dot_flops
+                c.transcendentals += sub.transcendentals
+                c.wire_bytes += sub.wire_bytes
+                c.n_collectives += sub.n_collectives
+                for k, v in sub.by_collective.items():
+                    c.by_collective[k] = c.by_collective.get(k, 0.0) + v
+                c.trip_counts.extend(sub.trip_counts)
+            # fusion-boundary bytes only (internal producers are free),
+            # with per-parameter utilization: a parameter consumed only by
+            # slice/gather/in-place-update ops is read at slice size, not
+            # full size, and a DUS-rooted fusion writes only the update
+            c.bytes_hbm += (self._fusion_in_bytes(callee, ins, opnds)
+                            + self._fusion_out_bytes(callee, out_b))
+            return c
+
+        if op == "while":
+            trip_m = _TRIP_RE.search(ins.attrs)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            body = self._callee(ins.attrs, "body")
+            cond = self._callee(ins.attrs, "condition")
+            if body:
+                c._add(self.comp_cost(body), trip)
+            if cond:
+                c._add(self.comp_cost(cond), trip)
+            c.trip_counts.append(trip)
+            return c
+
+        if op == "conditional":
+            for m in re.finditer(r"%([\w\.\-]+)", ins.attrs):
+                if m.group(1) in self.comps:
+                    c._add(self.comp_cost(m.group(1)))
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op == "reduce" or op == "reduce-window":
+            callee = self._callee(ins.attrs, "to_apply")
+            per = self.comp_cost(callee).flops if callee else 1.0
+            per = per or 1.0
+            n_in = sum(_shapes_elems(s) for s in opnds[:max(1, len(opnds) // 2)])
+            c.flops += max(n_in - out_e, 0) * per
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op == "map":
+            callee = self._callee(ins.attrs, "to_apply")
+            per = self.comp_cost(callee).flops if callee else 1.0
+            c.flops += out_e * per
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op == "scatter":
+            callee = self._callee(ins.attrs, "to_apply")
+            per = self.comp_cost(callee).flops if callee else 1.0
+            upd_e = _shapes_elems(opnds[-1]) if opnds else 0
+            upd_b = _shapes_bytes(opnds[-1]) if opnds else 0.0
+            c.flops += upd_e * per
+            c.bytes_hbm += 2.0 * upd_b + out_b
+            return c
+
+        if op in ("dynamic-slice", "slice", "gather"):
+            idx_b = sum(_shapes_bytes(s) for s in opnds[1:])
+            c.bytes_hbm += 2.0 * out_b + idx_b
+            return c
+
+        if op == "dynamic-update-slice":
+            upd_b = _shapes_bytes(opnds[1]) if len(opnds) > 1 else out_b
+            idx_b = sum(_shapes_bytes(s) for s in opnds[2:])
+            c.bytes_hbm += 2.0 * upd_b + idx_b
+            return c
+
+        if op in ("broadcast", "pad", "concatenate", "reverse", "copy",
+                  "sort", "rng", "rng-bit-generator", "select-and-scatter",
+                  "custom-call", "reduce-precision", "domain", "infeed",
+                  "outfeed", "cholesky", "triangular-solve", "fft"):
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        if op in _EW_TRANS:
+            c.transcendentals += out_e
+            c.bytes_hbm += in_b + out_b
+            return c
+
+        # default: elementwise-ish — 1 flop / element, stream in + out
+        if op in _EW_FLOPS:
+            c.flops += out_e
+        c.bytes_hbm += in_b + out_b
+        return c
+
+
+def _entry_name(comps: Dict[str, List[Instr]], text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps), None)
+
+
+def analyze(text: str) -> HloCost:
+    """Analyze a post-optimization HLO module dump (``compiled.as_text()``)."""
+    stripped = _COMMENT_RE.sub("", text)
+    comps = _parse_module(stripped, pre_stripped=True)
+    m = re.search(r"num_partitions=(\d+)", stripped)
+    num_partitions = int(m.group(1)) if m else 1
+    an = _Analyzer(comps, num_partitions)
+    entry = _entry_name(comps, stripped)
+    if entry is None:
+        return HloCost()
+    return an.comp_cost(entry)

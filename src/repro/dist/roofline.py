@@ -1,0 +1,90 @@
+"""Three-term roofline: compute / HBM / interconnect step-time model.
+
+Feeds on the per-device ``HloCost`` from ``repro.dist.hlo``. Each term is
+an independent lower bound on step time; their max is the roofline step
+time and the arg-max names the bottleneck the dry-run tables report:
+
+  compute_s     = flops / peak_flops
+  memory_s      = bytes_hbm / hbm_bandwidth
+  collective_s  = wire_bytes / ici_bandwidth
+
+``useful_ratio`` compares the analytic model flops (from the QLayer MAC
+table) against what the compiled graph actually executes — remat,
+fake-quant chains and padding all push it below 1 — and ``mfu`` is the
+classic model-flops utilization at the roofline step time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip hardware envelope (defaults approximate a TPU v5e)."""
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bytes_s: float = 819e9        # HBM bandwidth
+    ici_bytes_s: float = 180e9        # ICI bandwidth (all links)
+    dcn_bytes_s: float = 25e9         # cross-pod DCN, per chip share
+    hbm_bytes: float = 16 * 2**30
+
+
+DEFAULT_CHIP = ChipSpec()
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str                     # compute | memory | collective
+    step_time_s: float
+    model_flops_total: float
+    useful_ratio: float
+    mfu: float
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic model flops per step from the QLayer MAC table.
+
+    train: 6 MAC-factors (fwd 2 + bwd 4); prefill/decode: 2. Decode runs
+    one token per sequence.
+    """
+    from repro.models import lm   # local import: lm imports dist.axes
+    macs_per_token = sum(q.macs_per_token * q.n_mats
+                         for q in lm.enumerate_qlayers(cfg))
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * macs_per_token * tokens
+
+
+def report(arch: str, shape: ShapeSpec, mesh_label: str, n_chips: int,
+           costs, cfg: Optional[ModelConfig] = None,
+           chip: ChipSpec = DEFAULT_CHIP) -> RooflineReport:
+    """Build the three-term roofline from a per-device ``HloCost``."""
+    compute_s = costs.flops / chip.peak_flops
+    memory_s = costs.bytes_hbm / chip.hbm_bytes_s
+    collective_s = costs.wire_bytes / chip.ici_bytes_s
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_time_s = max(terms.values())
+
+    mft = model_flops(cfg, shape) if cfg is not None else 0.0
+    executed_total = costs.flops * max(n_chips, 1)
+    useful_ratio = mft / executed_total if executed_total else 0.0
+    denom = step_time_s * max(n_chips, 1) * chip.peak_flops
+    mfu = mft / denom if denom else 0.0
+
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_label, n_chips=n_chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, step_time_s=step_time_s,
+        model_flops_total=mft, useful_ratio=useful_ratio, mfu=mfu)

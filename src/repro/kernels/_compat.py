@@ -1,0 +1,10 @@
+"""Version-compat shims for the pallas TPU API surface."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<=0.4.x names it TPUCompilerParams; >=0.5 renamed to CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:                       # fail fast, at import
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels._compat for this jax version")

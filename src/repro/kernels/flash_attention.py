@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 DEFAULT_BLOCKS = (512, 512)      # q_block, kv_block
 
@@ -106,7 +108,7 @@ def flash_fwd_pallas(q, k, v, *, causal: bool, window=None,
             pltpu.VMEM((q_block,), jnp.float32),
             pltpu.VMEM((q_block, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -190,6 +190,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
             t_compile = time.time()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):     # jax<=0.4.x returns [dict]
+            cost = cost[0]
         txt = compiled.as_text()
         costs = hlo_mod.analyze(txt)
         rep = roofline.report(arch, shape, mesh_label, n_chips, costs, cfg)

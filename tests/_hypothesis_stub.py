@@ -1,0 +1,89 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+conftest.py registers this module as ``hypothesis`` (and its
+``strategies`` namespace) only if the real package is unavailable, so the
+property tests still execute: each ``@given`` test runs ``max_examples``
+seeded pseudo-random examples. No shrinking, no database — just coverage.
+Installing real hypothesis transparently takes precedence.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strats):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in strats))
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from, lists=lists, tuples=tuples, just=just)
+
+
+def settings(**kw):
+    def deco(fn):
+        fn._stub_settings = dict(kw)
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # like real hypothesis, the strategies fill the RIGHTMOST
+        # parameters; anything left of them (pytest fixtures) passes
+        # through — so bind draws by name, not position
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        drawn_names = names[len(names) - len(strats):]
+
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = int(getattr(run, "_stub_settings", {}).get("max_examples", 20))
+            rnd = random.Random(0xC0FFEE)
+            for _ in range(n):
+                draws = {k: s.draw(rnd) for k, s in zip(drawn_names, strats)}
+                fn(*args, **kwargs, **draws)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution
+        keep = [p for k, p in sig.parameters.items() if k not in drawn_names]
+        run.__signature__ = sig.replace(parameters=keep)
+        run.__dict__.pop("__wrapped__", None)
+        return run
+    return deco

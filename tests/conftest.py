@@ -1,9 +1,18 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see exactly 1 device; only launch/dryrun.py requests 512 placeholders."""
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:                                   # optional dep: property-test library
+    import hypothesis  # noqa: F401
+except ImportError:                    # container has no hypothesis — use the
+    import _hypothesis_stub            # deterministic stub (same API subset)
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 
 @pytest.fixture(scope="session")

@@ -71,6 +71,7 @@ print("SUBPROC_OK")
 """
 
 
+@pytest.mark.slow
 def test_overlap_kernels_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

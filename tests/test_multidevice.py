@@ -13,6 +13,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -98,6 +100,7 @@ print("MULTIDEVICE_OK", loss_ref, loss_sharded)
 """
 
 
+@pytest.mark.slow
 def test_sharded_step_matches_single_device_and_elastic_restore():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

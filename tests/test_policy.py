@@ -1,0 +1,81 @@
+"""MPQPolicy serialization round-trip + reverse_indicators involution."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import search
+from repro.core.policy import MPQPolicy
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def qlayers():
+    return lm.enumerate_qlayers(get_config("limpq-demo"))
+
+
+def _cyclic_policy(qlayers, bits=(2, 3, 4, 5, 6)):
+    n = len(bits)
+    return MPQPolicy(
+        {q.name: int(bits[i % n]) for i, q in enumerate(qlayers)},
+        {q.name: int(bits[(i + 1) % n]) for i, q in enumerate(qlayers)},
+        meta={"kind": "cyclic", "alpha": 0.5, "note": "round-trip"})
+
+
+def test_policy_json_roundtrip(tmp_path, qlayers):
+    """save -> load reproduces w_bits / a_bits / meta exactly."""
+    policy = _cyclic_policy(qlayers)
+    path = str(tmp_path / "policy.json")
+    policy.save(path)
+    back = MPQPolicy.load(path)
+    assert back.w_bits == policy.w_bits
+    assert back.a_bits == policy.a_bits
+    assert back.meta == policy.meta
+    # a second trip through text form is also the identity
+    again = MPQPolicy.from_json(back.to_json())
+    assert again.w_bits == policy.w_bits
+    assert again.a_bits == policy.a_bits
+    assert again.meta == policy.meta
+
+
+def test_policy_roundtrip_preserves_accounting(tmp_path, qlayers):
+    policy = _cyclic_policy(qlayers)
+    path = str(tmp_path / "policy.json")
+    policy.save(path)
+    back = MPQPolicy.load(path)
+    assert back.bitops(qlayers, 128) == policy.bitops(qlayers, 128)
+    assert back.size_bytes(qlayers) == policy.size_bytes(qlayers)
+    assert lm.bits_from_policy(get_config("limpq-demo"), back) is not None
+
+
+def _rand_indicators(qlayers, n_bits=5, seed=0):
+    r = np.random.default_rng(seed)
+    # distinct per-layer sums so the sensitivity ranking is a strict order
+    return {q.name: {"w": r.uniform(0.1, 1.0, n_bits) + i,
+                     "a": r.uniform(0.1, 1.0, n_bits) + i}
+            for i, q in enumerate(qlayers)}
+
+
+def test_reverse_indicators_is_involution(qlayers):
+    """Rank-mirroring twice restores the original table."""
+    ind = _rand_indicators(qlayers)
+    rev = search.reverse_indicators(qlayers, ind)
+    rev2 = search.reverse_indicators(qlayers, rev)
+    for name in ind:
+        np.testing.assert_array_equal(rev2[name]["w"], ind[name]["w"])
+        np.testing.assert_array_equal(rev2[name]["a"], ind[name]["a"])
+
+
+def test_reverse_indicators_mirrors_ranks(qlayers):
+    """Most-sensitive layer receives the least-sensitive layer's row."""
+    ind = _rand_indicators(qlayers)
+    rev = search.reverse_indicators(qlayers, ind)
+    score = {n: float(np.sum(d["w"]) + np.sum(d["a"]))
+             for n, d in ind.items()}
+    order = sorted(score, key=score.get)
+    for i, name in enumerate(order):
+        mirrored = order[len(order) - 1 - i]
+        np.testing.assert_array_equal(rev[name]["w"], ind[mirrored]["w"])
+        np.testing.assert_array_equal(rev[name]["a"], ind[mirrored]["a"])
+    # and the multiset of indicator rows is preserved (it's a permutation)
+    assert sorted(float(np.sum(d["w"])) for d in rev.values()) == \
+        sorted(float(np.sum(d["w"])) for d in ind.values())
