@@ -1,0 +1,87 @@
+"""CI regression gate for the serving benchmark.
+
+Compares a fresh ``BENCH_serve.json`` against the checked-in baseline and
+fails (exit 1) on >``--tol`` regression of any *deterministic* scheduler
+metric, or if the engine's tokens diverged from the fixed-batch path.
+Wall-clock throughput is printed for the artifact trail but never gated —
+hosted CI runners are too noisy for absolute tok/s thresholds.
+
+Regression direction per metric:
+  decode/slot steps        more steps than baseline  = scheduler regressed
+  tokens_generated         fewer tokens than baseline = work went missing
+
+Usage:
+  python benchmarks/check_regression.py benchmarks/out/BENCH_serve.json \
+      benchmarks/baselines/serve_baseline.json --tol 0.20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric -> +1 if larger-is-worse, -1 if smaller-is-worse
+GATED = {
+    "continuous_decode_steps": +1,
+    "continuous_slot_steps": +1,
+    "fixed_decode_steps": +1,
+    "fixed_padded_slot_steps": +1,
+    "tokens_generated": -1,
+}
+INFO = (
+    "continuous_tok_per_s",
+    "fixed_tok_per_s",
+    "continuous_total_tok_per_s",
+    "fixed_total_tok_per_s",
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.20,
+        help="allowed fractional regression (default 20%%)",
+    )
+    args = ap.parse_args(argv)
+    cur = json.load(open(args.current))
+    base = json.load(open(args.baseline))
+
+    failures = []
+    if not cur.get("token_identical", False):
+        failures.append(
+            "token_identical is false: engine diverged from the fixed-batch path"
+        )
+    for metric, worse_sign in GATED.items():
+        b, c = base.get(metric), cur.get(metric)
+        if b is None or c is None:
+            failures.append(f"{metric}: missing (baseline={b}, current={c})")
+            continue
+        delta = (c - b) / b if b else 0.0
+        regressed = worse_sign * delta > args.tol
+        mark = "FAIL" if regressed else "ok"
+        print(
+            f"  [{mark}] {metric}: baseline {b} -> current {c} "
+            f"({delta:+.1%}, tol {args.tol:.0%})"
+        )
+        if regressed:
+            failures.append(f"{metric} regressed {delta:+.1%}")
+    for metric in INFO:
+        if metric in cur:
+            print(
+                f"  [info] {metric}: {cur[metric]:.1f} "
+                f"(baseline {base.get(metric, float('nan')):.1f}, not gated)"
+            )
+
+    if failures:
+        print("\nREGRESSION: " + "; ".join(failures))
+        return 1
+    print("\nno regression vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 
 from repro import optim, training
 from repro.configs import get_config
-from repro.core import importance as imp
 from repro.data import SyntheticLM
 from repro.dist.axes import NO_AXES
 from repro.models import lm
@@ -58,6 +57,17 @@ def eval_no_finetune(cfg, params, ctx, bits, eval_batches):
     out policy differences; the direct quantization-noise CE is the
     cleaner ordering signal."""
     return training.evaluate(params, cfg, ctx, bits, eval_batches)["ce"]
+
+
+def spearman(a, b) -> float:
+    """Spearman rank correlation (argsort-of-argsort ranks, no tie split)."""
+    import numpy as np
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    return float((ra * rb).sum() /
+                 (np.sqrt((ra ** 2).sum() * (rb ** 2).sum()) + 1e-12))
 
 
 def write_csv(name: str, rows: List[Dict]):

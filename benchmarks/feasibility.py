@@ -14,7 +14,6 @@ wide MLP matmuls. Protocol (paper §3.3.1, adapted):
 from __future__ import annotations
 
 import numpy as np
-import jax
 
 from benchmarks import common
 from repro.core import importance as imp
@@ -28,7 +27,7 @@ def run(fast: bool = True):
     train_b, eval_b = batches[:10], batches[20:]
 
     # --- 1) ground truth: per-group one-at-a-time quantization -------------
-    FP_BITS = 8  # stand-in "unquantized" level within the bank (6 bits max)
+    # 8-bit stands in for "unquantized" within the bank (6 bits max)
     rows = []
     gt_gap = {}
     for q in ql:
@@ -60,14 +59,7 @@ def run(fast: bool = True):
     gt = np.asarray([gt_gap[n] for n in names])
     s2 = np.asarray([ind[n]["w"][0] + ind[n]["a"][0] for n in names])
 
-    def spearman(a, b):
-        ra = np.argsort(np.argsort(a)).astype(float)
-        rb = np.argsort(np.argsort(b)).astype(float)
-        ra -= ra.mean(); rb -= rb.mean()
-        return float((ra * rb).sum() /
-                     (np.sqrt((ra ** 2).sum() * (rb ** 2).sum()) + 1e-12))
-
-    rho = spearman(gt, s2)
+    rho = common.spearman(gt, s2)
     print(f"feasibility: spearman(indicator, sensitivity) = {rho:.3f}  "
           f"(n={len(names)})")
     rows.append({"layer": "SPEARMAN", "kind": "-", "ce_2b": "", "ce_4b": "",

@@ -17,11 +17,7 @@ from repro.models import lm
 def _rank_corr(ind_a, ind_b, names, bit_idx=0):
     a = np.asarray([ind_a[n]["w"][bit_idx] for n in names])
     b = np.asarray([ind_b[n]["w"][bit_idx] for n in names])
-    ra = np.argsort(np.argsort(a)).astype(float)
-    rb = np.argsort(np.argsort(b)).astype(float)
-    ra -= ra.mean(); rb -= rb.mean()
-    return float((ra * rb).sum() /
-                 (np.sqrt((ra ** 2).sum() * (rb ** 2).sum()) + 1e-12))
+    return common.spearman(a, b)
 
 
 def run(fast: bool = True):

@@ -8,7 +8,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 
 
 def load(dirpath):
@@ -39,6 +38,30 @@ def roofline_row(d, opt=None):
         f"{h['n_collectives']}",
     ]
     return "| " + " | ".join(str(c) for c in cells) + " |"
+
+
+def serve_rows(path="benchmarks/out/BENCH_serve.json"):
+    """Engine-throughput row protocol: one row per scheduling policy from
+    the serving benchmark artifact (BENCH_serve.json), deterministic
+    scheduler counters first, wall-clock tok/s last (machine-dependent)."""
+    if not os.path.exists(path):
+        return
+    d = json.load(open(path))
+    p = d["preset"]
+    print("## Serving engine throughput "
+          f"({p['arch']}, {p['n_requests']} reqs, slots={p['slots']}, "
+          f"prefill chunk {d['prefill_chunk']})\n")
+    print("| policy | decode steps | slot-steps | tokens | decode tok/s "
+          "| total tok/s |")
+    print("|" + "---|" * 6)
+    for policy, steps, slots_key in (
+            ("continuous", "continuous_decode_steps", "continuous_slot_steps"),
+            ("fixed", "fixed_decode_steps", "fixed_padded_slot_steps")):
+        print(f"| {policy} | {d[steps]} | {d[slots_key]} | "
+              f"{d['tokens_generated']} | {d[f'{policy}_tok_per_s']:.0f} | "
+              f"{d[f'{policy}_total_tok_per_s']:.0f} |")
+    ident = "yes" if d.get("token_identical") else "**NO**"
+    print(f"\ntoken-identical across policies: {ident}\n")
 
 
 def main():
@@ -85,6 +108,8 @@ def main():
             ot = o["memory"]["temp_bytes"] / 2**30
             print(f"| {k[0]} | {k[1]} | temp | {bt:.1f} GiB | {ot:.1f} GiB |"
                   f" {(ot-bt)/bt*100 if bt else 0:+.1f}% |")
+
+    serve_rows()
 
 
 if __name__ == "__main__":

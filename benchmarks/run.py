@@ -9,6 +9,8 @@
   hessian_baseline   Table 1/3  HAWQ-proxy criterion comparison
   kernel_report      —          Pallas kernels: correctness + VMEM budgets
   roofline_report    —          aggregates experiments/dryrun artifacts
+  serve_bench        —          continuous-batching engine vs fixed batch
+                                (writes BENCH_serve.json for the CI gate)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
 """
@@ -18,7 +20,8 @@ import traceback
 
 MODULES = ["kernel_report", "search_efficiency", "joint_training",
            "ablation_reverse", "search_bitops", "search_size",
-           "hessian_baseline", "feasibility", "roofline_report"]
+           "hessian_baseline", "feasibility", "roofline_report",
+           "serve_bench"]
 
 
 def main():

@@ -8,8 +8,6 @@ reversed, budgets respected — is what this table validates. DESIGN.md §8.)
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
 from repro.core import importance as imp
 from repro.core import search

@@ -1,0 +1,106 @@
+"""Serving-engine benchmark: continuous batching vs the fixed-batch path.
+
+Runs the same staggered request set through the `repro.launch.engine`
+continuous scheduler and the legacy fixed-batch policy, and writes
+``benchmarks/out/BENCH_serve.json``. Two metric classes:
+
+* deterministic scheduler metrics (decode_steps, slot_steps, tokens,
+  token_identical) — machine-independent, gated by
+  ``benchmarks/check_regression.py`` against the checked-in baseline in
+  ``benchmarks/baselines/serve_baseline.json``;
+* wall-clock throughput (tok/s for both policies) — recorded for the CI
+  artifact trail but not gated (hosted-runner speed varies run to run).
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only serve_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+
+from benchmarks.common import OUT_DIR
+from repro.configs import smoke_config
+from repro.data import SyntheticLM
+from repro.dist.axes import NO_AXES
+from repro.launch.engine import DecodeEngine, EngineConfig
+from repro.launch.serve import build_requests
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+
+import jax
+
+BENCH_PATH = os.path.join(OUT_DIR, "BENCH_serve.json")
+
+
+def bench_preset(fast: bool = True):
+    """Small deterministic preset: staggered prompts/gens, mixed arrivals."""
+    n_req = 8 if fast else 24
+    return dict(arch="limpq-demo", slots=4, prompt_len=16, gen=8,
+                n_requests=n_req, arrive_every=1)
+
+
+def run(fast: bool = True):
+    p = bench_preset(fast)
+    cfg = smoke_config(p["arch"])
+    rng = jax.random.PRNGKey(0)
+    params = lm.init_params(rng, cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    bits = lm.bits_uniform(cfg, 3)
+    data = SyntheticLM(cfg)
+    reqs = build_requests(data, p["n_requests"], p["prompt_len"], p["gen"],
+                          stagger=True, arrive_every=p["arrive_every"])
+    cache_len = p["prompt_len"] + p["gen"]
+
+    eng = DecodeEngine(params, cfg, bits, ctx, NO_AXES,
+                       EngineConfig(slots=p["slots"], cache_len=cache_len))
+    results = {}
+    for policy in ("continuous", "fixed"):
+        eng.reset(policy)           # warmup pass: pay the jit compiles so the
+        eng.submit_all(reqs)        # recorded wall-clock is steady-state
+        eng.run()
+        eng.reset(policy)
+        eng.submit_all(reqs)
+        completions = eng.run()
+        results[policy] = {
+            "stats": eng.stats.as_dict(),
+            "tokens": {r.rid: completions[r.rid].tokens for r in reqs},
+        }
+
+    cont, fixed = results["continuous"], results["fixed"]
+    identical = cont["tokens"] == fixed["tokens"]
+    out = {
+        "preset": p,
+        "prefill_chunk": eng.prefill_chunk,
+        "token_identical": identical,
+        # gated (deterministic)
+        "continuous_decode_steps": cont["stats"]["decode_steps"],
+        "continuous_slot_steps": cont["stats"]["slot_steps"],
+        "fixed_decode_steps": fixed["stats"]["decode_steps"],
+        "fixed_padded_slot_steps": fixed["stats"]["padded_slot_steps"],
+        "tokens_generated": cont["stats"]["tokens_generated"],
+        # informational (machine-dependent)
+        "continuous_tok_per_s": cont["stats"]["decode_tokens_per_s"],
+        "fixed_tok_per_s": fixed["stats"]["decode_tokens_per_s"],
+        "continuous_total_tok_per_s": cont["stats"]["total_tokens_per_s"],
+        "fixed_total_tok_per_s": fixed["stats"]["total_tokens_per_s"],
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"  token_identical={identical} | decode steps: "
+          f"continuous {out['continuous_decode_steps']} vs fixed "
+          f"{out['fixed_decode_steps']} | slot-steps "
+          f"{out['continuous_slot_steps']} vs "
+          f"{out['fixed_padded_slot_steps']} (padded)")
+    print(f"  -> {BENCH_PATH}")
+    assert identical, "continuous batching diverged from the fixed-batch path"
+    assert out["continuous_decode_steps"] < out["fixed_decode_steps"], \
+        "continuous batching saved no decode steps on the staggered preset"
+    return out
+
+
+if __name__ == "__main__":
+    run()

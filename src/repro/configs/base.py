@@ -7,7 +7,7 @@ adding a config file, not model code.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # Bit-width options searched by the paper (first/last layers pinned to 8).

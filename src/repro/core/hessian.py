@@ -24,7 +24,7 @@ from repro.core.qspec import QLayer
 from repro.core.quantizer import bit_range, fake_quant, init_scale_from_stats
 from repro.dist.axes import NO_AXES, MeshAxes
 from repro.models import lm
-from repro.models.quant_layers import QuantContext, fp_context
+from repro.models.quant_layers import fp_context
 
 
 def _weight_leaf(params, q: QLayer):

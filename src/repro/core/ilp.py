@@ -17,8 +17,6 @@ sum of per-layer choice costs <= budget, picking exactly one choice per layer
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
-
 import numpy as np
 
 

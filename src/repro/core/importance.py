@@ -16,8 +16,7 @@ QLayer order, producing exactly what ``repro.core.search.search_policy``
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -18,11 +18,11 @@ hosts materialize only their own slice of the global batch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models.lm import FRONTEND_DIMS
 
 

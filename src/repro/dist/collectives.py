@@ -21,8 +21,7 @@ Overlap kernels (shard_map, portable to any backend with a mesh):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

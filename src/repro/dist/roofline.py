@@ -65,6 +65,86 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
     return factor * macs_per_token * tokens
 
 
+# ---------------------------------------------------------------------------
+# per-step analytic costs (the serving scheduler's hook)
+# ---------------------------------------------------------------------------
+def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
+                     cache_tokens: int = 0, tp_size: int = 1,
+                     avg_weight_bits: float = 8.0,
+                     chip: ChipSpec = DEFAULT_CHIP) -> dict:
+    """Analytic three-term roofline for ONE continuous-batching decode step.
+
+    Unlike ``report`` this needs no compiled HLO — the serving scheduler
+    calls it per step shape, so it is built from the QLayer MAC/param table:
+
+      compute_s     2 * macs * n_slots / peak_flops (per chip: megatron
+                    row+column parallel splits the matmuls over tp)
+      memory_s      (weight bytes at avg_weight_bits + KV-cache bytes
+                    actually attended, i.e. cache_tokens rows per slot,
+                    both sharded over tp) / hbm_bytes_s — decode re-reads
+                    every weight per token, so this term usually dominates
+      collective_s  2 activation all-reduces per layer over the tp group
+                    (megatron row+column parallel) / ici_bytes_s
+
+    Returns the three terms plus ``step_s``/``dominant``.
+    """
+    from repro.models import lm   # local import: lm imports dist.axes
+    qlayers = lm.enumerate_qlayers(cfg)
+    macs = sum(q.macs_per_token * q.n_mats for q in qlayers)
+    w_params = sum(q.w_params * q.n_mats for q in qlayers)
+    # only self-attention sites hold a token KV cache (recurrent/LRU sites
+    # carry O(1) state, cross-attn caches image tokens), and a sliding
+    # window caps the rows a cache can hold
+    n_kv_layers = sum(1 for s in lm.iter_sites(cfg)
+                      if s.kind in ("attn", "dense", "moe"))
+    window = cfg.local_window if cfg.family == "hybrid" else cfg.sliding_window
+    kv_rows = min(cache_tokens, window) if window else cache_tokens
+
+    tp = max(tp_size, 1)
+    compute_s = 2.0 * macs * n_slots / tp / chip.peak_flops
+    w_bytes = w_params * (avg_weight_bits / 8.0) / tp
+    kv_bytes = 2.0 * kv_rows * n_slots * cfg.kv_dim * n_kv_layers * 2 / tp
+    memory_s = (w_bytes + kv_bytes) / chip.hbm_bytes_s
+    wire = (2.0 * 2 * cfg.n_layers * n_slots * cfg.d_model
+            * 2 * (tp_size - 1) / max(tp_size, 1)) if tp_size > 1 else 0.0
+    collective_s = wire / chip.ici_bytes_s
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "step_s": max(terms.values()),
+            "dominant": dominant}
+
+
+def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
+                          cache_tokens: int = 0, tp_size: int = 1,
+                          avg_weight_bits: float = 8.0,
+                          chip: ChipSpec = DEFAULT_CHIP,
+                          min_chunk: int = 16, max_chunk: int = 512) -> int:
+    """Prefill-token budget per engine iteration, from the decode roofline.
+
+    A decode step is HBM/ICI-bound: the weights (and tp activations) move
+    regardless of how much compute rides along. Prefill tokens are compute
+    bound and reuse the same weight traffic, so the headroom between the
+    decode step's memory/collective ceiling and its compute term is "free"
+    prefill compute. The chunk is that headroom divided by the per-token
+    prefill compute time, clamped to [min_chunk, max_chunk] so admission
+    neither starves (tiny models: huge headroom) nor stalls decode (big
+    models: none).
+    """
+    cost = decode_step_cost(cfg, n_slots, cache_tokens=cache_tokens,
+                            tp_size=tp_size, avg_weight_bits=avg_weight_bits,
+                            chip=chip)
+    ceiling = max(cost["memory_s"], cost["collective_s"])
+    headroom_s = max(ceiling - cost["compute_s"], 0.0)
+    from repro.models import lm
+    macs = sum(q.macs_per_token * q.n_mats for q in lm.enumerate_qlayers(cfg))
+    per_token_s = 2.0 * macs / max(tp_size, 1) / chip.peak_flops
+    chunk = int(headroom_s / per_token_s) if per_token_s > 0 else max_chunk
+    return max(min_chunk, min(max_chunk, chunk))
+
+
 def report(arch: str, shape: ShapeSpec, mesh_label: str, n_chips: int,
            costs, cfg: Optional[ModelConfig] = None,
            chip: ChipSpec = DEFAULT_CHIP) -> RooflineReport:

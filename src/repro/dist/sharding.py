@@ -24,7 +24,7 @@ asserts this for every arch).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import numpy as np
@@ -210,16 +210,19 @@ def batch_specs(cfg: ModelConfig, batch, axes: MeshAxes):
 
 def decode_state_specs(cfg: ModelConfig, state, axes: MeshAxes):
     """Decode-state (KV cache / recurrent state) specs: shard the batch dim
-    over data axes. Body segments carry a leading (repeats,) stack dim, so
-    their batch dim is index 1; position vectors and other low-rank
-    bookkeeping replicate."""
+    — the continuous-batching engine's *slot* axis — over data axes. Body
+    segments carry a leading (repeats,) stack dim, so their slot dim is
+    index 1. Rank-(2+b) leaves cover the per-slot bookkeeping the engine
+    adds (per-slot KVCache position rows (slots, cap), rank-2 recurrent
+    hidden states); shared position vectors (cap,) and body-stacked shared
+    positions (repeats, cap) stay below the rank gate and replicate."""
     def one(path, leaf):
         shape = tuple(leaf.shape)
         rank = len(shape)
         body = bool(path) and str(getattr(path[0], "key", "")) == "body"
         b = 1 if body else 0
         entries = [None] * rank
-        if (rank >= 3 + b and axes.dp and shape[b] > 1
+        if (rank >= 2 + b and axes.dp and shape[b] > 1
                 and shape[b] % axes.dp_size == 0):
             entries[b] = axes.dp
         return P(*entries)

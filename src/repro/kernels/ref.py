@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantizer import fake_quant as _fake_quant_core
 from repro.models.recurrent import wkv_scan_ref as _wkv_scan_ref
 
 

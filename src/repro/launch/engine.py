@@ -1,0 +1,340 @@
+"""Continuous-batching decode engine (ROADMAP item 3).
+
+The engine turns ``repro.models.lm``'s prefill/decode passes into a
+servable system: ``slots`` concurrent sequences share one jitted decode
+step over per-slot KV caches (``init_decode_state(per_slot=True)`` — the
+slot axis is what ``dist.sharding.decode_state_specs`` shards over ``dp``),
+and a ``repro.launch.scheduler.Scheduler`` decides admission. A finished
+sequence frees its slot mid-flight, so a staggered workload completes in
+strictly fewer decode steps than padding everything to the max length.
+
+Execution model (host loop, three jitted device functions):
+
+* ``prefill``  — one request at a time, whole prompt, ``prefill_cap`` sized
+  to the slot's cache. Recompiles per distinct prompt length (the jit cache
+  keys on shape), which is the standard serving trade-off; bucket prompt
+  lengths upstream if that matters.
+* ``insert``  — writes the prefilled per-layer state into slot row ``i``
+  (``dynamic_update_slice`` on the slot axis; axis 1 for body-stacked
+  segments, axis 0 elsewhere).
+* ``decode``  — one token for all slots at once with a per-slot position
+  vector. Free slots ride along at position -1: their row writes land with
+  position -1 (never valid to attend), so an evicted slot can never leak KV
+  entries into a later occupant — admission overwrites the whole row anyway.
+
+Inactive slots still occupy compute (the decode batch is static — standard
+for continuous-batching engines); the win is scheduling, measured by
+``EngineStats.decode_steps`` / ``slot_steps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist import roofline
+from repro.dist.axes import NO_AXES, MeshAxes
+from repro.launch.scheduler import Completion, Request, Scheduler
+from repro.models import attention as attn
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Engine knobs (see README "Serving" for the full story)."""
+
+    slots: int = 4  # concurrent sequences
+    cache_len: int = 64  # per-slot KV capacity (prompt + generation)
+    prefill_chunk: int = 0  # prefill tokens per iteration; 0 = roofline auto
+    policy: str = "continuous"  # continuous | continuous-sjf | fixed
+    eos_id: Optional[int] = None  # optional early-stop token id
+    state_dtype: Any = jnp.float32
+    max_iters: int = 100_000  # hard stop for the host loop
+    chip: roofline.ChipSpec = roofline.DEFAULT_CHIP
+
+
+@dataclasses.dataclass
+class EngineStats:
+    iterations: int = 0  # scheduler ticks (admission and/or decode)
+    decode_steps: int = 0  # jitted decode launches
+    slot_steps: int = 0  # sum over decode steps of slots emitting a token
+    padded_slot_steps: int = 0  # sum of *occupied* slots (fixed pads to max)
+    prefill_calls: int = 0
+    prefill_tokens: int = 0
+    admitted: int = 0
+    completed: int = 0
+    tokens_generated: int = 0
+    t_prefill_s: float = 0.0
+    t_decode_s: float = 0.0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return self.tokens_generated / max(self.t_decode_s, 1e-9)
+
+    @property
+    def total_tokens_per_s(self) -> float:
+        total = self.tokens_generated + self.prefill_tokens
+        return total / max(self.t_decode_s + self.t_prefill_s, 1e-9)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["decode_tokens_per_s"] = self.decode_tokens_per_s
+        d["total_tokens_per_s"] = self.total_tokens_per_s
+        return d
+
+
+class _Slot:
+    """Host-side bookkeeping for one engine slot."""
+
+    __slots__ = ("req", "next_tok", "next_pos", "gen", "done", "admitted_at")
+
+    def __init__(self, req: Request, first_tok: int, now: int):
+        self.req = req
+        self.next_tok = first_tok
+        self.next_pos = req.prompt_len
+        self.gen: List[int] = [first_tok]
+        self.done = False
+        self.admitted_at = now
+
+
+class DecodeEngine:
+    """Slot-based continuous-batching decode engine over a quantized LM."""
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        bits,
+        ctx,
+        axes: MeshAxes = NO_AXES,
+        ecfg: Optional[EngineConfig] = None,
+        scheduler: Optional[Scheduler] = None,
+    ):
+        if cfg.encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        chunk = self.ecfg.prefill_chunk or roofline.suggest_prefill_chunk(
+            cfg,
+            self.ecfg.slots,
+            cache_tokens=self.ecfg.cache_len,
+            chip=self.ecfg.chip,
+        )
+        self.prefill_chunk = int(chunk)
+        self.scheduler = scheduler or Scheduler(self.ecfg.policy, self.prefill_chunk)
+        self.stats = EngineStats()
+        self.slots: List[Optional[_Slot]] = [None] * self.ecfg.slots
+        self.completions: Dict[int, Completion] = {}
+        self.state = lm.init_decode_state(
+            cfg,
+            self.ecfg.slots,
+            self.ecfg.cache_len,
+            dtype=self.ecfg.state_dtype,
+            per_slot=True,
+        )
+
+        cache_len = self.ecfg.cache_len
+
+        def prefill(p, inputs):
+            return lm.apply_prefill(
+                p, cfg, inputs, bits, ctx, axes, prefill_cap=cache_len
+            )
+
+        def decode(p, tok, pos, state):
+            return lm.apply_decode(p, cfg, tok, pos, state, bits, ctx, axes)
+
+        def insert(full, row, slot):
+            def one(path, f, r):
+                seg = str(getattr(path[0], "key", path[0]))
+                axis = 1 if seg == "body" else 0
+                return jax.lax.dynamic_update_slice_in_dim(
+                    f, r.astype(f.dtype), slot, axis=axis
+                )
+
+            return jax.tree_util.tree_map_with_path(one, full, row)
+
+        def evict(state, slot):
+            def one(c):
+                if not isinstance(c, attn.KVCache):
+                    return c
+                axis = c.pos.ndim - 2  # slot axis: 0 plain, 1 body-stacked
+                empty_shape = list(c.pos.shape)
+                empty_shape[axis] = 1
+                empty = jnp.full(empty_shape, -1, jnp.int32)
+                pos = jax.lax.dynamic_update_slice_in_dim(
+                    c.pos, empty, slot, axis=axis
+                )
+                return c._replace(pos=pos)
+
+            return jax.tree.map(
+                one, state, is_leaf=lambda x: isinstance(x, attn.KVCache)
+            )
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(3,))
+        self._insert = jax.jit(insert, donate_argnums=(0,))
+        self._evict = jax.jit(evict, donate_argnums=(0,))
+
+    def reset(self, policy: Optional[str] = None) -> None:
+        """Clear queue, slots, stats, and decode state — but keep the jitted
+        prefill/decode/insert/evict functions, so an engine can serve many
+        request sets without recompiling."""
+        self.scheduler = Scheduler(
+            policy or self.scheduler.policy, self.prefill_chunk
+        )
+        self.stats = EngineStats()
+        self.slots = [None] * self.ecfg.slots
+        self.completions = {}
+        self.state = lm.init_decode_state(
+            self.cfg,
+            self.ecfg.slots,
+            self.ecfg.cache_len,
+            dtype=self.ecfg.state_dtype,
+            per_slot=True,
+        )
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Validate and enqueue a request."""
+        if req.prompt_len < 1 or req.max_new < 1:
+            raise ValueError(f"request {req.rid}: empty prompt or max_new < 1")
+        in_flight = {s.req.rid for s in self.slots if s is not None}
+        taken = in_flight | set(self.completions)
+        taken.update(r.rid for r in self.scheduler.pending)
+        if req.rid in taken:
+            raise ValueError(
+                f"request id {req.rid} already queued, running, or completed"
+            )
+        windowed = bool(self.cfg.sliding_window or self.cfg.local_window)
+        if not windowed and req.prompt_len + req.max_new > self.ecfg.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new} exceeds cache_len {self.ecfg.cache_len} "
+                "(full-attention arch cannot ring-wrap without changing "
+                "results)"
+            )
+        self.scheduler.submit(req)
+
+    def submit_all(self, reqs) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    # -- internals ----------------------------------------------------------
+    def _occupied(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def _free(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _finish(self, idx: int, now: int) -> None:
+        slot = self.slots[idx]
+        assert slot is not None
+        self.completions[slot.req.rid] = Completion(
+            rid=slot.req.rid,
+            prompt_len=slot.req.prompt_len,
+            tokens=slot.gen[: slot.req.max_new],
+            admitted_at=slot.admitted_at,
+            finished_at=now,
+        )
+        self.stats.completed += 1
+        self.stats.tokens_generated += len(slot.gen[: slot.req.max_new])
+        self.slots[idx] = None
+        self.state = self._evict(self.state, jnp.asarray(idx, jnp.int32))
+
+    def _mark_done(self, idx: int, now: int) -> None:
+        """Sequence finished: free immediately (continuous) or hold the slot
+        until the whole round drains (fixed-batch padding semantics)."""
+        slot = self.slots[idx]
+        assert slot is not None
+        slot.done = True
+        if not self.scheduler.hold_round:
+            self._finish(idx, now)
+
+    def _admit(self, req: Request, idx: int, now: int) -> None:
+        inputs = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
+        if req.extra_inputs:
+            inputs.update(
+                {k: jnp.asarray(v)[None] for k, v in req.extra_inputs.items()}
+            )
+        t0 = time.time()
+        logits, row = self._prefill(self.params, inputs)
+        row = lm.decode_state_per_slot(row)
+        self.state = self._insert(self.state, row, jnp.asarray(idx, jnp.int32))
+        first = int(jax.block_until_ready(jnp.argmax(logits[0], -1)))
+        self.stats.t_prefill_s += time.time() - t0
+        self.stats.prefill_calls += 1
+        self.stats.prefill_tokens += req.prompt_len
+        self.stats.admitted += 1
+        self.slots[idx] = _Slot(req, first, now)
+        if req.max_new == 1 or first == self.ecfg.eos_id:
+            self._mark_done(idx, now)
+
+    def _decode_step(self, now: int) -> None:
+        n = self.ecfg.slots
+        toks = np.zeros((n, 1), np.int32)
+        pos = np.full((n,), -1, np.int32)
+        live: List[int] = []
+        for i, s in enumerate(self.slots):
+            if s is not None and not s.done:
+                toks[i, 0] = s.next_tok
+                pos[i] = s.next_pos
+                live.append(i)
+        t0 = time.time()
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.state
+        )
+        nxt = np.asarray(jax.block_until_ready(jnp.argmax(logits, -1)))
+        self.stats.t_decode_s += time.time() - t0
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += len(live)
+        self.stats.padded_slot_steps += len(self._occupied())
+        for i in live:
+            s = self.slots[i]
+            s.gen.append(int(nxt[i]))
+            s.next_tok = int(nxt[i])
+            s.next_pos += 1
+            if len(s.gen) >= s.req.max_new or nxt[i] == self.ecfg.eos_id:
+                self._mark_done(i, now)
+
+    # -- main loop ----------------------------------------------------------
+    def step(self, now: int) -> bool:
+        """One engine iteration: release a drained round (fixed policy),
+        admit per policy, then decode. Returns False when there is nothing
+        left to do."""
+        if self.scheduler.hold_round:
+            occ = self._occupied()
+            if occ and all(self.slots[i].done for i in occ):
+                for i in occ:
+                    self._finish(i, now)
+        if self.scheduler.has_pending():
+            picks = self.scheduler.admit(now, self._free(), len(self._occupied()))
+            for req, idx in picks:
+                self._admit(req, idx, now)
+        if any(s is not None and not s.done for s in self.slots):
+            self._decode_step(now)
+        elif self._occupied():
+            pass  # held round finished at admission: released next tick
+        elif not self.scheduler.has_pending():
+            return False
+        self.stats.iterations += 1
+        return True
+
+    def run(self) -> Dict[int, Completion]:
+        """Drain the queue; returns {rid: Completion}."""
+        now = 0
+        while self.step(now):
+            now += 1
+            if now >= self.ecfg.max_iters:
+                raise RuntimeError(
+                    f"engine exceeded max_iters={self.ecfg.max_iters} "
+                    f"(pending={len(self.scheduler.pending)}, "
+                    f"occupied={len(self._occupied())})"
+                )
+        assert not self._occupied(), "slot leak: occupied slots after drain"
+        return self.completions

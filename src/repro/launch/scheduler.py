@@ -1,0 +1,131 @@
+"""Request queue + admission policies for the continuous-batching engine.
+
+The scheduler owns *which* request enters *which* slot *when*; the engine
+(`repro.launch.engine`) owns the device state. Three policies:
+
+* ``continuous`` — FIFO continuous batching: a finished sequence frees its
+  slot immediately and the next arrived request is admitted mid-flight,
+  subject to a per-iteration prefill-token budget (see below).
+* ``continuous-sjf`` — same, but arrived requests admit shortest-prompt
+  first (reduces head-of-line blocking under the token budget).
+* ``fixed`` — the legacy fixed-batch path expressed as a policy: requests
+  are admitted only when every slot is free, and the engine holds all slots
+  until the whole round finishes — i.e. everything is padded to the round's
+  max generation length.
+
+Prefill/decode interleave
+-------------------------
+Every engine iteration grants the scheduler ``prefill_chunk`` tokens of
+prefill bandwidth (the chunk comes from
+``repro.dist.roofline.suggest_prefill_chunk``: the headroom between the
+decode step's HBM/ICI ceiling and its compute term, i.e. how many
+compute-bound prefill tokens ride along a memory-bound decode step for
+free). Credit accrues while work is waiting, and a request is admitted
+once its prompt cost is covered — a prompt longer than the chunk therefore
+spreads its admission over ``ceil(prompt / chunk)`` iterations, which is
+exactly the stall pattern of chunked prefill without needing a separate
+multi-token cache-append kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+POLICIES = ("continuous", "continuous-sjf", "fixed")
+
+
+class Request(NamedTuple):
+    """One serving request: a prompt and a generation budget."""
+
+    rid: int
+    tokens: np.ndarray  # (P,) int32 prompt token ids
+    max_new: int  # generation budget (>= 1; the prefill emits token 1)
+    arrival: int = 0  # engine iteration at which the request becomes visible
+    extra_inputs: Optional[Dict[str, Any]] = None  # e.g. VLM image features
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+
+@dataclasses.dataclass
+class Completion:
+    """Engine output for one request."""
+
+    rid: int
+    prompt_len: int
+    tokens: List[int]  # generated ids, length <= max_new
+    admitted_at: int  # engine iteration of admission (prefill)
+    finished_at: int  # engine iteration after which the sequence was done
+
+
+class Scheduler:
+    """Admission policy over a request queue (see module docstring)."""
+
+    def __init__(self, policy: str = "continuous", prefill_chunk: int = 128):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+        self.policy = policy
+        self.prefill_chunk = int(prefill_chunk)
+        self.pending: List[Request] = []
+        self._credit = 0
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if not self.pending:
+            # a fresh wave after the queue drained must not inherit credit
+            # banked by the previous wave (admit() is only called while work
+            # is pending, so it cannot clear this itself)
+            self._credit = 0
+        self.pending.append(req)
+
+    def has_pending(self) -> bool:
+        return bool(self.pending)
+
+    def _arrived(self, now: int) -> List[Request]:
+        arrived = [r for r in self.pending if r.arrival <= now]
+        if self.policy == "continuous-sjf":
+            arrived.sort(key=lambda r: (r.prompt_len, r.rid))
+        return arrived
+
+    # -- policy -------------------------------------------------------------
+    @property
+    def hold_round(self) -> bool:
+        """Fixed-batch semantics: slots stay occupied until the whole round
+        is done (the engine pads every sequence to the round max)."""
+        return self.policy == "fixed"
+
+    def admit(
+        self, now: int, free_slots: List[int], occupied: int
+    ) -> List[Tuple[Request, int]]:
+        """Return [(request, slot)] to admit at iteration ``now``."""
+        if self.policy == "fixed":
+            if occupied:
+                return []
+            picks = self._arrived(now)[: len(free_slots)]
+            self._drop(picks)
+            return list(zip(picks, free_slots))
+
+        # continuous: accrue prefill credit only while work is waiting
+        arrived = self._arrived(now)
+        if arrived:
+            self._credit += self.prefill_chunk
+        else:
+            self._credit = 0
+        out: List[Tuple[Request, int]] = []
+        free = list(free_slots)
+        for r in arrived:
+            if not free or self._credit < r.prompt_len:
+                break
+            self._credit -= r.prompt_len
+            out.append((r, free.pop(0)))
+        self._drop([r for r, _ in out])
+        return out
+
+    def _drop(self, picks: List[Request]) -> None:
+        # removal by identity: list.remove would compare Request tuples,
+        # and equality on the np.ndarray tokens field raises/ambiguates
+        taken = {id(r) for r in picks}
+        self.pending = [p for p in self.pending if id(p) not in taken]

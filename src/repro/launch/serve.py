@@ -1,19 +1,26 @@
-"""Serving driver: batched prefill + greedy decode with a mixed-precision
-policy active (CPU-runnable demo of the deployment path).
+"""Serving driver: request-queue front-end over the continuous-batching
+decode engine (``repro.launch.engine``), with a mixed-precision policy
+active (CPU-runnable demo of the deployment path).
+
+The legacy fixed-batch loop is now one scheduling policy among several
+(``--schedule fixed``); the default is continuous batching with
+roofline-driven prefill/decode interleave. ``--compare`` (implied by
+``--smoke``) runs the same request set under both schedules, checks the
+generated tokens are identical, and reports the decode steps saved.
 
 Also demonstrates the int8 execution path: the searched per-layer bits all
 land on the int8 grid, so a projection executes as
 ``quant_matmul(int8, int8) * s_x * s_w`` — bit-exact with the fake-quant
 training graph (validated here and in tests/test_kernels.py).
 
-Example:
-  python -m repro.launch.serve --arch limpq-demo --batch 4 --prompt-len 32 \
-      --gen 16
+Examples:
+  python -m repro.launch.serve --smoke
+  python -m repro.launch.serve --arch limpq-demo --requests 8 --slots 4 \
+      --prompt-len 32 --gen 16 --stagger --compare
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,21 +29,84 @@ from repro.configs import get_config, smoke_config
 from repro.core.policy import MPQPolicy
 from repro.data import SyntheticLM
 from repro.dist.axes import NO_AXES
+from repro.launch.engine import DecodeEngine, EngineConfig
+from repro.launch.scheduler import POLICIES, Request
 from repro.models import lm
 from repro.models.quant_layers import QuantContext
+
+
+def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0):
+    """A deterministic request set from the synthetic corpus. ``stagger``
+    varies prompt/generation lengths across requests (the workload shape
+    continuous batching wins on); ``arrive_every`` spaces arrivals out by
+    that many engine iterations."""
+    reqs = []
+    for i in range(n):
+        p = prompt_len
+        g = gen
+        if stagger:
+            p = max(4, prompt_len - 3 * (i % 4))
+            g = max(2, gen - 2 * (i % 3))
+        toks = data.batch(i, 1, p)["tokens"][0]
+        reqs.append(
+            Request(rid=i, tokens=toks, max_new=g, arrival=i * arrive_every)
+        )
+    return reqs
+
+
+def run_engine(params, cfg, bits, ctx, reqs, *, schedule, slots, cache_len,
+               eng=None):
+    """Run one request set; pass ``eng`` to reuse its compiled functions
+    (reset under the new schedule instead of paying a full re-jit)."""
+    if eng is None:
+        ecfg = EngineConfig(slots=slots, cache_len=cache_len, policy=schedule)
+        eng = DecodeEngine(params, cfg, bits, ctx, NO_AXES, ecfg)
+    else:
+        eng.reset(schedule)
+    eng.submit_all(reqs)
+    completions = eng.run()
+    return eng, completions
+
+
+def print_stats(label, eng):
+    s = eng.stats
+    print(
+        f"{label}: {s.completed} done | prefill {s.prefill_tokens} tok "
+        f"{s.t_prefill_s * 1e3:.0f} ms | decode {s.decode_steps} steps "
+        f"({s.slot_steps} slot-steps) {s.t_decode_s * 1e3:.0f} ms "
+        f"({s.decode_tokens_per_s:.0f} tok/s) | "
+        f"prefill chunk {eng.prefill_chunk}"
+    )
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="limpq-demo")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", "--batch", type=int, default=4, dest="slots")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--policy", default=None)
+    ap.add_argument("--cache-len", type=int, default=0, help="0 = prompt+gen")
+    ap.add_argument("--schedule", default="continuous", choices=POLICIES)
+    ap.add_argument("--stagger", action="store_true")
+    ap.add_argument("--arrive-every", type=int, default=0)
+    ap.add_argument("--compare", action="store_true",
+                    help="run continuous AND fixed; check token identity")
+    ap.add_argument("--policy", default=None, help="MPQPolicy json path")
     ap.add_argument("--uniform-bits", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        if args.schedule == "fixed":
+            raise SystemExit("--smoke needs a continuous schedule: its gate "
+                             "compares the engine against the fixed path")
+        args.compare = True
+        args.stagger = True
+        args.requests = min(args.requests, 6)
+        args.prompt_len = min(args.prompt_len, 16)
+        args.gen = min(args.gen, 8)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encoder_only:
@@ -51,52 +121,62 @@ def main(argv=None):
     bits = lm.bits_from_policy(cfg, policy, ql)
 
     data = SyntheticLM(cfg)
-    batch = data.batch(0, args.batch, args.prompt_len)
-    inputs = {k: jnp.asarray(v) for k, v in batch.items()}
-    cap = args.prompt_len + args.gen
+    reqs = build_requests(data, args.requests, args.prompt_len, args.gen,
+                          stagger=args.stagger,
+                          arrive_every=args.arrive_every)
+    cache_len = args.cache_len or (args.prompt_len + args.gen)
 
-    prefill = jax.jit(lambda p, b: lm.apply_prefill(
-        p, cfg, b, bits, ctx, NO_AXES, prefill_cap=cap))
-    decode = jax.jit(lambda p, t, pos, st: lm.apply_decode(
-        p, cfg, t, pos, st, bits, ctx, NO_AXES))
+    eng = None
+    if args.compare and args.schedule != "fixed":
+        # warmup pass: pay the jit compiles up front so both measured runs
+        # report steady-state throughput (serve_bench does the same)
+        eng, _ = run_engine(params, cfg, bits, ctx, reqs,
+                            schedule=args.schedule, slots=args.slots,
+                            cache_len=cache_len)
+    eng, completions = run_engine(params, cfg, bits, ctx, reqs,
+                                  schedule=args.schedule, slots=args.slots,
+                                  cache_len=cache_len, eng=eng)
+    cont_stats = eng.stats      # reset() below replaces, not mutates, this
+    print_stats(args.schedule, eng)
+    r0 = completions[0]
+    print(f"generated[rid=0] ({r0.prompt_len}-token prompt):", r0.tokens)
 
-    t0 = time.time()
-    logits, state = prefill(params, inputs)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill: B={args.batch} S={args.prompt_len} "
-          f"{t_prefill*1e3:.1f} ms "
-          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
-
-    tokens = [jnp.argmax(logits, -1)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        tok = tokens[-1][:, None].astype(jnp.int32)
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, state = decode(params, tok, pos, state)
-        tokens.append(jnp.argmax(logits, -1))
-    jax.block_until_ready(tokens[-1])
-    t_dec = time.time() - t0
-    out = jnp.stack(tokens, 1)
-    print(f"decode: {args.gen - 1} steps {t_dec*1e3:.1f} ms "
-          f"({args.batch*(args.gen-1)/max(t_dec,1e-9):.0f} tok/s)")
-    print("generated[0]:", out[0].tolist())
+    if args.compare and args.schedule != "fixed":
+        fixed, fixed_out = run_engine(params, cfg, bits, ctx, reqs,
+                                      schedule="fixed", slots=args.slots,
+                                      cache_len=cache_len, eng=eng)
+        print_stats("fixed", fixed)
+        mismatch = [r.rid for r in completions.values()
+                    if fixed_out[r.rid].tokens != r.tokens]
+        if mismatch:
+            raise SystemExit(f"token mismatch vs fixed batch: rids {mismatch}")
+        saved = fixed.stats.decode_steps - cont_stats.decode_steps
+        print(f"token-identical with fixed batch; {saved} decode steps saved "
+              f"({cont_stats.decode_steps} vs {fixed.stats.decode_steps})")
+        if args.smoke and args.stagger and saved <= 0:
+            raise SystemExit("continuous batching saved no decode steps on a "
+                             "staggered schedule")
+    elif args.compare:
+        print("note: --compare has no effect with --schedule fixed "
+              "(nothing to compare the fixed path against)")
 
     # --- int8 execution-path equivalence on one projection -----------------
-    from repro.core.quantizer import bit_range
-    from repro.kernels import ops
-    p0 = params["body"]["0"]["wq"]
-    w = p0["w"][0] if p0["w"].ndim == 3 else p0["w"]
-    s_w = (p0["s_w"][0] if p0["s_w"].ndim == 2 else p0["s_w"])[2]  # 4-bit bank
-    qmin, qmax = bit_range(4, True)
-    wq = jnp.clip(jnp.round(w / s_w), qmin, qmax).astype(jnp.int8)
-    x = jax.random.normal(rng, (8, w.shape[0]), jnp.float32)
-    s_x = jnp.float32(0.05)
-    xq = jnp.clip(jnp.round(x / s_x), qmin, qmax).astype(jnp.int8)
-    fused = ops.quant_matmul(xq, wq, s_x, s_w, blocks=(8, 128, 128))
-    ref = (xq.astype(jnp.float32) * s_x) @ (wq.astype(jnp.float32) * s_w)
-    err = float(jnp.max(jnp.abs(fused - ref)))
-    print(f"int8 quant_matmul vs fake-quant ref: max_err={err:.2e}")
+    body0 = params.get("body", {}).get("0", {})
+    if "wq" in body0:
+        from repro.core.quantizer import bit_range
+        from repro.kernels import ops
+        p0 = body0["wq"]
+        w = p0["w"][0] if p0["w"].ndim == 3 else p0["w"]
+        s_w = (p0["s_w"][0] if p0["s_w"].ndim == 2 else p0["s_w"])[2]  # 4-bit
+        qmin, qmax = bit_range(4, True)
+        wq = jnp.clip(jnp.round(w / s_w), qmin, qmax).astype(jnp.int8)
+        x = jax.random.normal(rng, (8, w.shape[0]), jnp.float32)
+        s_x = jnp.float32(0.05)
+        xq = jnp.clip(jnp.round(x / s_x), qmin, qmax).astype(jnp.int8)
+        fused = ops.quant_matmul(xq, wq, s_x, s_w, blocks=(8, 128, 128))
+        ref = (xq.astype(jnp.float32) * s_x) @ (wq.astype(jnp.float32) * s_w)
+        err = float(jnp.max(jnp.abs(fused - ref)))
+        print(f"int8 quant_matmul vs fake-quant ref: max_err={err:.2e}")
 
 
 if __name__ == "__main__":

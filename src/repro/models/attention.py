@@ -332,25 +332,94 @@ def cross_attention(q: Array, k: Array, v: Array) -> Array:
 # KV cache (decode)
 # ---------------------------------------------------------------------------
 class KVCache(NamedTuple):
+    """Decode-time ring buffer.
+
+    Two position layouts share this container:
+
+    * shared  — ``pos (Sc,)``: every batch row sits at the same absolute
+      position (the fixed-batch serving path).
+    * per-slot — ``pos (B, Sc)``: each batch row is an independent serving
+      *slot* with its own position/length (the continuous-batching engine).
+      ``decode_attention`` dispatches on ``pos.ndim``.
+    """
     k: Array      # (B, Sc, KV, hd) — ring buffer when Sc < full context
     v: Array
-    pos: Array    # (Sc,) int32 absolute position per slot, -1 = empty
+    pos: Array    # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
 
 
 def init_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
-                  dtype=jnp.bfloat16) -> KVCache:
+                  dtype=jnp.bfloat16, per_slot: bool = False) -> KVCache:
+    pos_shape = (batch, capacity) if per_slot else (capacity,)
     return KVCache(
         k=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
         v=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
-        pos=jnp.full((capacity,), -1, jnp.int32),
+        pos=jnp.full(pos_shape, -1, jnp.int32),
     )
+
+
+def cache_per_slot(cache):
+    """Widen a shared-position KVCache to the per-slot layout.
+
+    Handles plain caches (k (B,Sc,KV,hd), pos (Sc,)) and body-stacked ones
+    (k (R,B,Sc,KV,hd), pos (R,Sc)). Non-KVCache leaves pass through, so it
+    can be ``jax.tree.map``-ped over a whole decode-state tree with
+    ``is_leaf=lambda x: isinstance(x, KVCache)``.
+    """
+    if not isinstance(cache, KVCache):
+        return cache
+    if cache.k.ndim == 4 and cache.pos.ndim == 1:
+        pos = jnp.broadcast_to(cache.pos[None, :],
+                               (cache.k.shape[0],) + cache.pos.shape)
+    elif cache.k.ndim == 5 and cache.pos.ndim == 2:
+        R, B = cache.k.shape[:2]
+        pos = jnp.broadcast_to(cache.pos[:, None, :],
+                               (R, B, cache.pos.shape[-1]))
+    else:
+        return cache                     # already per-slot
+    return cache._replace(pos=pos)
+
+
+def _decode_attention_slots(q: Array, cache: KVCache, k_new: Array,
+                            v_new: Array, pos: Array, *,
+                            window: Optional[int]):
+    """Per-slot one-token decode: row b writes at slot ``pos[b] % cap`` and
+    attends under its own causal/window/validity mask. Rows whose cache is
+    empty (all pos -1) softmax over a fully-masked row — finite output,
+    discarded by the engine for inactive slots."""
+    B, _, H, hd = q.shape
+    cap, KV = cache.k.shape[1], cache.k.shape[2]
+    G = H // KV
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = jnp.mod(jnp.maximum(pos, 0), cap)
+
+    def row_update(c, n, s):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+
+    k = jax.vmap(row_update)(cache.k, k_new, slot)
+    v = jax.vmap(row_update)(cache.v, v_new, slot)
+    pos_arr = jax.vmap(row_update)(cache.pos, pos[:, None], slot)
+
+    qr = q.reshape(B, 1, KV, G, hd) * (hd ** -0.5)
+    logits = _gqa_logits(qr, k)                         # (B,KV,G,1,cap)
+    valid = (pos_arr >= 0) & (pos_arr <= pos[:, None])
+    if window is not None:
+        valid &= pos[:, None] - pos_arr < window
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    logits = logits + bias[:, None, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(B, 1, H, hd)
+    return out, KVCache(k=k, v=v, pos=pos_arr)
 
 
 def decode_attention(q: Array, cache: KVCache, k_new: Array, v_new: Array,
                      pos, *, window: Optional[int]):
     """One-token decode: write (k_new, v_new) at slot pos % capacity, then
     attend over the cache. RoPE is applied before caching, so slot order is
-    irrelevant to the softmax."""
+    irrelevant to the softmax. With a per-slot cache (pos (B, Sc)) ``pos``
+    is a (B,) vector and each row masks independently."""
+    if cache.pos.ndim == 2:
+        return _decode_attention_slots(q, cache, k_new, v_new, pos,
+                                       window=window)
     B, one, H, hd = q.shape
     cap = cache.k.shape[1]
     slot = jnp.mod(pos, cap)

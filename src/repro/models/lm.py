@@ -36,9 +36,7 @@ from repro.dist.axes import NO_AXES, MeshAxes
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import recurrent as rec_mod
-from repro.models.common import (
-    activation, apply_norm, dense_init, embed_init, norm_init, rope_table,
-)
+from repro.models.common import activation, apply_norm, embed_init, norm_init
 from repro.models.quant_layers import (
     QuantContext, embed_lookup_pinned, qdense_init, qeinsum, qeinsum_pinned,
     pinned_init,
@@ -92,12 +90,15 @@ def iter_sites(cfg: ModelConfig) -> List[LayerSite]:
     s = build_schedule(cfg)
     sites, g = [], 0
     for i, kind in enumerate(s.prefix):
-        sites.append(LayerSite(kind, f"prefix.{i}", 0, g)); g += 1
+        sites.append(LayerSite(kind, f"prefix.{i}", 0, g))
+        g += 1
     for u in range(s.repeats):
         for p, kind in enumerate(s.pattern):
-            sites.append(LayerSite(kind, f"body.{p}", u, g)); g += 1
+            sites.append(LayerSite(kind, f"body.{p}", u, g))
+            g += 1
     for i, kind in enumerate(s.suffix):
-        sites.append(LayerSite(kind, f"suffix.{i}", 0, g)); g += 1
+        sites.append(LayerSite(kind, f"suffix.{i}", 0, g))
+        g += 1
     return sites
 
 
@@ -460,9 +461,16 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
             q = _qk_rms(q, p["q_norm"], cfg.norm_eps)
             k = _qk_rms(k, p["k_norm"], cfg.norm_eps)
         if cfg.family != "audio":                      # audio: sinusoid, no rope
-            positions = (jnp.asarray(pos, jnp.int32)[None] if mode == "decode"
-                         else jnp.arange(S))
+            per_slot = mode == "decode" and jnp.ndim(pos) == 1
+            if mode == "decode":
+                p_ = jnp.asarray(pos, jnp.int32)
+                positions = jnp.maximum(p_, 0) if per_slot else p_[None]
+            else:
+                positions = jnp.arange(S)
             cos, sin = _rope_cos_sin(cfg, positions)
+            if per_slot:            # (B, hd/2) -> (B, 1, 1, hd/2): one angle
+                cos = cos[:, None, None]    # per slot, broadcast over S and H
+                sin = sin[:, None, None]
             from repro.models.common import apply_rope
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
@@ -685,8 +693,15 @@ def apply_prefill(params, cfg: ModelConfig, inputs, bits, ctx: QuantContext,
 
 def apply_decode(params, cfg: ModelConfig, token: Array, pos, states, bits,
                  ctx: QuantContext, axes: MeshAxes = NO_AXES):
-    """One decode step. token (B,1) int32, pos scalar int32.
-    Returns (logits (B,V), new states)."""
+    """One decode step. token (B,1) int32.
+
+    ``pos`` is either a scalar int32 (fixed-batch serving: every row sits at
+    the same position, KV caches carry shared ``pos (Sc,)``) or a (B,)
+    vector (slot-indexed serving: row b is an independent engine slot at its
+    own position, caches carry per-slot ``pos (B, Sc)`` — see
+    ``init_decode_state(per_slot=True)``). Per-slot rows mask their own
+    cache by position/length, so inactive or shorter slots never see another
+    row's KV entries. Returns (logits (B,V), new states)."""
     x, _ = embed_inputs(params, cfg, {"tokens": token}, ctx, axes)
     x, new_states, _ = run_layers(x, params, bits, cfg, ctx, axes,
                                   mode="decode", states=states, pos=pos,
@@ -699,8 +714,13 @@ def apply_decode(params, cfg: ModelConfig, token: Array, pos, states, bits,
 # decode-state + input specs (ShapeDtypeStruct stand-ins for the dry-run)
 # ===========================================================================
 def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
-                      dtype=jnp.bfloat16):
-    """Allocate decode state for a context of `capacity` tokens."""
+                      dtype=jnp.bfloat16, per_slot: bool = False):
+    """Allocate decode state for a context of `capacity` tokens.
+
+    ``per_slot=True`` lays the KV caches out for the continuous-batching
+    engine: the batch dim becomes a slot axis and every cache carries its
+    own (batch, cap) position row, so sequences at different positions can
+    share one decode step (``apply_decode`` with a (B,) pos vector)."""
     sched = build_schedule(cfg)
     KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
     W = cfg.lru_width or cfg.d_model
@@ -709,7 +729,8 @@ def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
         if kind in ("attn", "dense", "moe"):
             window = _attn_window(cfg, kind)
             cap = min(capacity, window) if window else capacity
-            return attn.init_kv_cache(batch, cap, KV, hd, dtype)
+            return attn.init_kv_cache(batch, cap, KV, hd, dtype,
+                                      per_slot=per_slot)
         if kind == "cross":
             n = cfg.n_image_tokens
             return (jnp.zeros((batch, n, KV, hd), dtype),
@@ -736,6 +757,15 @@ def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
     for i, kind in enumerate(sched.suffix):
         states["suffix"][str(i)] = site_state(kind)
     return states
+
+
+def decode_state_per_slot(states):
+    """Widen a prefill-produced decode state to the per-slot layout: every
+    KVCache's shared position vector is broadcast to one row per batch
+    entry. Non-cache leaves (recurrent states, cross-attn image KV) already
+    carry the batch dim and pass through unchanged."""
+    return jax.tree.map(attn.cache_per_slot, states,
+                        is_leaf=lambda x: isinstance(x, attn.KVCache))
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:

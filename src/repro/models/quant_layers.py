@@ -12,8 +12,6 @@ and never enter the search.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

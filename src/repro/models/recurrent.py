@@ -25,7 +25,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import activation, dense_init
+from repro.models.common import dense_init
 from repro.models.quant_layers import QuantContext, qdense_init, qeinsum
 
 Array = jax.Array

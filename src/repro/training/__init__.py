@@ -7,7 +7,7 @@ steps — one code path for every experiment row.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,5 @@
 """Checkpoint manager: atomicity, keep-N, async, elastic restore."""
 import os
-import threading
-import time
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Assigned-architecture configs must match the brief EXACTLY."""
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, get_config, list_archs, smoke_config
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
 from repro.configs.base import SHAPES_BY_NAME, shape_applicable
 
 EXPECT = {

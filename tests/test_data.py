@@ -1,6 +1,5 @@
 """Synthetic data pipeline: determinism, host sharding, skip-to-step."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config, smoke_config
 from repro.data import DataConfig, SyntheticLM

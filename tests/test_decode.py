@@ -1,6 +1,5 @@
 """Serving-path integration: prefill + step-by-step decode must reproduce
 the train-mode forward logits exactly (same quantization active)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -97,7 +97,8 @@ def test_reversed_assignment_mechanics(demo):
                              for n in names])
     ra = np.argsort(np.argsort(fwd_scores)).astype(float)
     rb = np.argsort(np.argsort(rev_scores)).astype(float)
-    ra -= ra.mean(); rb -= rb.mean()
+    ra -= ra.mean()
+    rb -= rb.mean()
     rho = (ra * rb).sum() / np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
     assert rho < -0.99                       # perfectly anti-correlated
 

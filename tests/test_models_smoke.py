@@ -7,11 +7,11 @@ import numpy as np
 import pytest
 
 from repro import optim, training
-from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
+from repro.configs import ASSIGNED_ARCHS, smoke_config
 from repro.core.policy import MPQPolicy
 from repro.dist.axes import NO_AXES
 from repro.models import lm
-from repro.models.quant_layers import QuantContext, fp_context
+from repro.models.quant_layers import QuantContext
 
 from conftest import make_inputs
 

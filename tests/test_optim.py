@@ -1,8 +1,6 @@
 """Optimizer correctness vs handwritten numpy references."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import optim
 

@@ -140,3 +140,22 @@ def test_batch_specs_b1_replicates():
     assert spec == P(None, None)
     many = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
     assert sharding.batch_specs(cfg, many, axes) == P(("data",), None)
+
+
+def test_decode_state_slot_axis():
+    """Per-slot engine state: the slot (batch) axis shards over dp, incl.
+    the rank-2 per-slot position rows; shared position vectors replicate."""
+    cfg = get_config("qwen3-0.6b")
+    axes = _axes(cfg)
+    state = jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, 32, 128, per_slot=True))
+    specs = sharding.decode_state_specs(cfg, state, axes)
+    cache, spec = state["body"]["0"], specs["body"]["0"]
+    assert cache.pos.shape == (cfg.n_layers, 32, 128)
+    assert spec.k == P(None, ("data",), None, None, None)
+    assert spec.pos == P(None, ("data",), None)   # slot axis on the pos rows
+
+    shared = jax.eval_shape(lambda: lm.init_decode_state(cfg, 32, 128))
+    sspecs = sharding.decode_state_specs(cfg, shared, axes)
+    assert shared["body"]["0"].pos.shape == (cfg.n_layers, 128)
+    assert sspecs["body"]["0"].pos == P(None, None)  # cap dim never shards

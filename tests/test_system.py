@@ -1,11 +1,8 @@
 """End-to-end system behaviour: the full paper pipeline + drivers."""
 import json
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import importance as imp
