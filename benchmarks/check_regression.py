@@ -1,18 +1,30 @@
-"""CI regression gate for the serving benchmark.
+"""CI regression gate for the serving benchmarks.
 
-Compares a fresh ``BENCH_serve.json`` against the checked-in baseline and
-fails (exit 1) on >``--tol`` regression of any *deterministic* scheduler
-metric, or if the engine's tokens diverged from the fixed-batch path.
-Wall-clock throughput is printed for the artifact trail but never gated —
-hosted CI runners are too noisy for absolute tok/s thresholds.
+Compares a fresh bench JSON against its checked-in baseline and fails
+(exit 1) on >``--tol`` regression of any *deterministic* metric, or if the
+tokens diverged from the reference path. Wall-clock throughput is printed
+for the artifact trail but never gated — hosted CI runners are too noisy
+for absolute tok/s thresholds.
+
+Two profiles (``--profile``):
+  serve   BENCH_serve.json        — continuous-batching scheduler counters
+                                    vs the fixed-batch path
+  quant   BENCH_quant_serve.json  — packed mixed-precision runtime: decode
+                                    steps, packed-HBM ratios, bucketed
+                                    prefill compile count, token identity
+                                    vs the fake-quant reference graph
 
 Regression direction per metric:
   decode/slot steps        more steps than baseline  = scheduler regressed
   tokens_generated         fewer tokens than baseline = work went missing
+  packed_vs_*/compiles     bigger than baseline = packing/bucketing regressed
 
 Usage:
   python benchmarks/check_regression.py benchmarks/out/BENCH_serve.json \
       benchmarks/baselines/serve_baseline.json --tol 0.20
+  python benchmarks/check_regression.py \
+      benchmarks/out/BENCH_quant_serve.json \
+      benchmarks/baselines/quant_serve_baseline.json --profile quant
 """
 from __future__ import annotations
 
@@ -35,6 +47,24 @@ INFO = (
     "fixed_total_tok_per_s",
 )
 
+GATED_QUANT = {
+    "decode_steps": +1,
+    "tokens_generated": -1,
+    "prefill_compiles": +1,
+    "packed_vs_policy": +1,
+    "packed_vs_fp32": +1,
+}
+INFO_QUANT = (
+    "packed_tok_per_s",
+    "reference_tok_per_s",
+    "hbm_bytes_saved_per_step",
+)
+
+PROFILES = {
+    "serve": (GATED, INFO, "the fixed-batch path"),
+    "quant": (GATED_QUANT, INFO_QUANT, "the fake-quant reference graph"),
+}
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -46,16 +76,23 @@ def main(argv=None):
         default=0.20,
         help="allowed fractional regression (default 20%%)",
     )
+    ap.add_argument(
+        "--profile",
+        default="serve",
+        choices=sorted(PROFILES),
+        help="which benchmark's metric table to gate",
+    )
     args = ap.parse_args(argv)
     cur = json.load(open(args.current))
     base = json.load(open(args.baseline))
+    gated, info_metrics, reference = PROFILES[args.profile]
 
     failures = []
     if not cur.get("token_identical", False):
         failures.append(
-            "token_identical is false: engine diverged from the fixed-batch path"
+            f"token_identical is false: engine diverged from {reference}"
         )
-    for metric, worse_sign in GATED.items():
+    for metric, worse_sign in gated.items():
         b, c = base.get(metric), cur.get(metric)
         if b is None or c is None:
             failures.append(f"{metric}: missing (baseline={b}, current={c})")
@@ -69,7 +106,7 @@ def main(argv=None):
         )
         if regressed:
             failures.append(f"{metric} regressed {delta:+.1%}")
-    for metric in INFO:
+    for metric in info_metrics:
         if metric in cur:
             print(
                 f"  [info] {metric}: {cur[metric]:.1f} "

@@ -64,6 +64,39 @@ def serve_rows(path="benchmarks/out/BENCH_serve.json"):
     print(f"\ntoken-identical across policies: {ident}\n")
 
 
+def quant_serve_rows(path="benchmarks/out/BENCH_quant_serve.json"):
+    """Quantized-runtime row protocol: packed-vs-policy HBM accounting,
+    bucketed prefill compiles, and the bit-aware roofline step counters
+    from BENCH_quant_serve.json."""
+    if not os.path.exists(path):
+        return
+    d = json.load(open(path))
+    p = d["preset"]
+    print(f"## Quantized serving runtime ({p['arch']}, "
+          f"{p['n_requests']} reqs, slots={p['slots']})\n")
+    print("| metric | value |")
+    print("|---|---|")
+    ident = "yes" if d.get("token_identical") else "**NO**"
+    rows = [
+        ("token-identical vs fake-quant graph", ident),
+        ("packed bytes / policy accounting", f"x{d['packed_vs_policy']:.3f}"),
+        ("packed bytes / fp32", f"x{d['packed_vs_fp32']:.3f}"),
+        ("avg searched bits (w / a)",
+         f"{d['avg_bits_w']:.2f} / {d['avg_bits_a']:.2f}"),
+        ("decode steps", d["decode_steps"]),
+        ("prefill shapes compiled (bucketed)",
+         f"{d['prefill_compiles']} vs {d['reference_prefill_compiles']} "
+         "unbucketed"),
+        ("roofline step HBM bytes (fp -> quantized)",
+         f"{d['step_counters']['fp']['step_hbm_bytes']:.2e} -> "
+         f"{d['step_counters']['quantized']['step_hbm_bytes']:.2e}"),
+        ("packed tok/s (not gated)", f"{d['packed_tok_per_s']:.0f}"),
+    ]
+    for k, v in rows:
+        print(f"| {k} | {v} |")
+    print()
+
+
 def main():
     base = load("experiments/dryrun_baseline") or load("experiments/dryrun")
     print("## Generated roofline tables\n")
@@ -110,6 +143,7 @@ def main():
                   f" {(ot-bt)/bt*100 if bt else 0:+.1f}% |")
 
     serve_rows()
+    quant_serve_rows()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,158 @@
+"""Quantized-serving benchmark: the packed runtime vs the fake-quant graph.
+
+Runs a mixed (cyclic over the searched widths) policy through
+``repro.runtime.session.QuantizedSession`` — packed weights, int8 KV
+slots, bucketed prefill — and the fake-quant reference engine on the same
+staggered request set, then writes ``benchmarks/out/BENCH_quant_serve.json``:
+
+* deterministic gated metrics (``check_regression.py --profile quant``):
+  token identity with the reference graph, decode steps, tokens, measured
+  packed-vs-policy HBM ratio, packed-vs-fp32 compression, bucketed prefill
+  compile count;
+* per-step FLOP/byte counters from the bit-aware roofline
+  (``dist.roofline.decode_step_cost``) for the fp16/bf16-KV baseline vs
+  the packed+int8-KV runtime — the arithmetic-intensity shift quantized
+  serving buys;
+* wall-clock throughput for the artifact trail (never gated).
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only quant_serve_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OUT_DIR
+from repro.configs import smoke_config
+from repro.data import SyntheticLM
+from repro.dist import roofline
+from repro.dist.axes import NO_AXES
+from repro.launch.engine import DecodeEngine, EngineConfig
+from repro.launch.serve import build_requests
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+from repro.runtime.session import QuantizedSession, summarize
+
+BENCH_PATH = os.path.join(OUT_DIR, "BENCH_quant_serve.json")
+
+
+def bench_preset(fast: bool = True):
+    n_req = 6 if fast else 16
+    return dict(arch="limpq-demo", slots=4, prompt_len=16, gen=6,
+                n_requests=n_req, arrive_every=1)
+
+
+def _mixed_policy(cfg):
+    # the same builder the serve --policy smoke uses: the checked-in
+    # baseline pins this exact bit assignment
+    from repro.launch.serve import demo_mixed_policy
+    return lm.enumerate_qlayers(cfg), demo_mixed_policy(cfg)
+
+
+def _step_counters(cfg, slots, cache_len, *, kv_bits, w_bits_total=None,
+                   avg_weight_bits=32.0):
+    cost = roofline.decode_step_cost(
+        cfg, slots, cache_tokens=cache_len, kv_bits=kv_bits,
+        w_bits_total=w_bits_total, avg_weight_bits=avg_weight_bits)
+    chip = roofline.DEFAULT_CHIP
+    flops = cost["compute_s"] * chip.peak_flops
+    hbm = cost["memory_s"] * chip.hbm_bytes_s
+    return {"step_flops": flops, "step_hbm_bytes": hbm,
+            "flops_per_byte": flops / hbm if hbm else 0.0,
+            "step_s_model": cost["step_s"], "dominant": cost["dominant"]}
+
+
+def run(fast: bool = True):
+    p = bench_preset(fast)
+    cfg = smoke_config(p["arch"])
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    ql, policy = _mixed_policy(cfg)
+    data = SyntheticLM(cfg)
+    reqs = build_requests(data, p["n_requests"], p["prompt_len"], p["gen"],
+                          stagger=True, arrive_every=p["arrive_every"])
+    cache_len = p["prompt_len"] + p["gen"]
+
+    sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+                            kv_quant="int8")
+    packed_eng = DecodeEngine(
+        sess.params, cfg, None, ctx, NO_AXES,
+        EngineConfig(slots=p["slots"], cache_len=cache_len, kv_quant="int8",
+                     bucket_prompts=True),
+        adapter=sess)
+    bits = lm.bits_from_policy(cfg, policy, ql)
+    ref_eng = DecodeEngine(
+        params, cfg, bits, ctx, NO_AXES,
+        EngineConfig(slots=p["slots"], cache_len=cache_len, kv_quant="fake"))
+
+    results = {}
+    for name, eng in (("packed", packed_eng), ("reference", ref_eng)):
+        eng.submit_all(reqs)        # warmup pass: pay the jit compiles
+        eng.run()
+        eng.reset()
+        eng.submit_all(reqs)
+        completions = eng.run()
+        results[name] = {
+            "stats": eng.stats.as_dict(),
+            "tokens": {r.rid: completions[r.rid].tokens for r in reqs},
+        }
+
+    identical = results["packed"]["tokens"] == results["reference"]["tokens"]
+    info = summarize(sess)
+    w_bits_total = policy.size_bytes(ql) * 8.0
+    counters = {
+        "fp": _step_counters(cfg, p["slots"], cache_len, kv_bits=16.0,
+                             avg_weight_bits=16.0),
+        "quantized": _step_counters(cfg, p["slots"], cache_len, kv_bits=8.0,
+                                    w_bits_total=w_bits_total),
+    }
+    pstats = results["packed"]["stats"]
+    out = {
+        "preset": p,
+        "token_identical": identical,
+        # gated (deterministic)
+        "decode_steps": pstats["decode_steps"],
+        "tokens_generated": pstats["tokens_generated"],
+        "prefill_compiles": pstats["prefill_compiles"],
+        "packed_vs_policy": info["packed_vs_policy"],
+        "packed_vs_fp32": 1.0 / info["compression_vs_fp32"],
+        # informational
+        "packed_bytes": info["packed_bytes"],
+        "scale_bytes": info["scale_bytes"],
+        "policy_bytes": info["policy_bytes"],
+        "fp32_bytes": info["fp32_bytes"],
+        "avg_bits_w": info["avg_bits"][0],
+        "avg_bits_a": info["avg_bits"][1],
+        "reference_prefill_compiles":
+            results["reference"]["stats"]["prefill_compiles"],
+        "step_counters": counters,
+        "hbm_bytes_saved_per_step":
+            counters["fp"]["step_hbm_bytes"]
+            - counters["quantized"]["step_hbm_bytes"],
+        "packed_tok_per_s": pstats["decode_tokens_per_s"],
+        "reference_tok_per_s":
+            results["reference"]["stats"]["decode_tokens_per_s"],
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"  token_identical={identical} | packed {info['packed_bytes']} B "
+          f"= x{info['packed_vs_policy']:.3f} of policy accounting, "
+          f"{info['compression_vs_fp32']:.2f}x under fp32 | decode steps "
+          f"{out['decode_steps']} | prefill shapes {out['prefill_compiles']} "
+          f"(reference {out['reference_prefill_compiles']})")
+    print(f"  roofline step bytes: fp {counters['fp']['step_hbm_bytes']:.2e}"
+          f" -> quantized {counters['quantized']['step_hbm_bytes']:.2e}")
+    print(f"  -> {BENCH_PATH}")
+    assert identical, "packed runtime diverged from the fake-quant reference"
+    assert abs(info["packed_vs_policy"] - 1.0) <= 0.05, \
+        "packed HBM bytes off the policy accounting by more than 5%"
+    return out
+
+
+if __name__ == "__main__":
+    run()

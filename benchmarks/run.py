@@ -11,6 +11,9 @@
   roofline_report    —          aggregates experiments/dryrun artifacts
   serve_bench        —          continuous-batching engine vs fixed batch
                                 (writes BENCH_serve.json for the CI gate)
+  quant_serve_bench  —          packed mixed-precision runtime vs the
+                                fake-quant reference graph (writes
+                                BENCH_quant_serve.json for the CI gate)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
 """
@@ -21,7 +24,7 @@ import traceback
 MODULES = ["kernel_report", "search_efficiency", "joint_training",
            "ablation_reverse", "search_bitops", "search_size",
            "hessian_baseline", "feasibility", "roofline_report",
-           "serve_bench"]
+           "serve_bench", "quant_serve_bench"]
 
 
 def main():

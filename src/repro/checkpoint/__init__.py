@@ -156,6 +156,42 @@ class CheckpointManager:
             return json.load(f)
 
 
+# ---------------------------------------------------------------------------
+# serving bundles: params + searched policy in one atomic checkpoint
+# ---------------------------------------------------------------------------
+def save_serving_bundle(directory: str, step: int, params,
+                        policy, *, extra_meta: Optional[dict] = None,
+                        keep_n: int = 3) -> None:
+    """Checkpoint trained params together with the searched ``MPQPolicy``
+    (stored in the step's meta.json), so the serving runtime can restore a
+    deployable (params, policy) pair from one atomic artifact."""
+    meta = dict(extra_meta or {})
+    meta["mpq_policy"] = policy.to_json()
+    mgr = CheckpointManager(directory, keep_n=keep_n)
+    mgr.save(step, params, meta=meta, blocking=True)
+
+
+def load_serving_bundle(directory: str, template, *, step: Optional[int] = None,
+                        sharding_fn: Optional[Callable[[str], Any]] = None):
+    """Restore ``(params, policy, meta)`` saved by ``save_serving_bundle``.
+    ``step=None`` loads the latest step."""
+    from repro.core.policy import MPQPolicy
+
+    mgr = CheckpointManager(directory)
+    if step is None:
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory!r}")
+    meta = mgr.meta(step)
+    if "mpq_policy" not in meta:
+        raise KeyError(
+            f"checkpoint step {step} in {directory!r} has no 'mpq_policy' "
+            "meta entry — not a serving bundle")
+    params = mgr.restore(step, template, sharding_fn=sharding_fn)
+    policy = MPQPolicy.from_json(meta["mpq_policy"])
+    return params, policy, meta
+
+
 class StepWatchdog:
     """Straggler mitigation hook: tracks step wall-times and flags outliers
     (a slow host in a real fleet). The train loop consults `suspect` to log

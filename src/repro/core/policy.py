@@ -70,14 +70,58 @@ class MPQPolicy:
             }
         return out
 
+    # -- deployment-time validation ----------------------------------------
+    def validate(self, qlayers: Sequence[QLayer],
+                 bits: Sequence[int] | None = None) -> "MPQPolicy":
+        """Check this policy covers exactly the model's QLayers (and, when
+        ``bits`` is given, only searched bit-widths). A stale policy file —
+        renamed layers, different depth, foreign arch — fails loudly here
+        instead of silently mis-dispatching in the serving runtime."""
+        names = {q.name for q in qlayers}
+        covered = set(self.w_bits) & set(self.a_bits)
+        unknown = sorted((set(self.w_bits) | set(self.a_bits)) - names)
+        missing = sorted(names - covered)
+        problems = []
+        if unknown:
+            problems.append(f"unknown layer names {unknown[:5]}"
+                            + (f" (+{len(unknown) - 5} more)"
+                               if len(unknown) > 5 else ""))
+        if missing:
+            problems.append(f"missing layer names {missing[:5]}"
+                            + (f" (+{len(missing) - 5} more)"
+                               if len(missing) > 5 else ""))
+        if bits is not None:
+            allowed = {int(b) for b in bits}
+            bad = sorted({b for b in list(self.w_bits.values())
+                          + list(self.a_bits.values())
+                          if int(b) not in allowed})
+            if bad:
+                problems.append(f"bit-widths {bad} outside searched set "
+                                f"{sorted(allowed)}")
+        if problems:
+            raise ValueError(
+                "MPQPolicy does not match this model's layer table: "
+                + "; ".join(problems)
+                + ". Was the policy searched for a different arch/config?")
+        return self
+
     # -- serialization -----------------------------------------------------
+    SCHEMA_VERSION = 1
+
     def to_json(self) -> str:
-        return json.dumps({"w_bits": self.w_bits, "a_bits": self.a_bits,
+        return json.dumps({"schema": self.SCHEMA_VERSION,
+                           "w_bits": self.w_bits, "a_bits": self.a_bits,
                            "meta": self.meta}, indent=2, sort_keys=True)
 
     @staticmethod
     def from_json(s: str) -> "MPQPolicy":
         d = json.loads(s)
+        schema = int(d.get("schema", 0))   # 0 = pre-versioning files
+        if schema > MPQPolicy.SCHEMA_VERSION:
+            raise ValueError(
+                f"MPQPolicy schema {schema} is newer than this build "
+                f"supports ({MPQPolicy.SCHEMA_VERSION}); refusing to guess "
+                "at its layout")
         return MPQPolicy(dict(d["w_bits"]), dict(d["a_bits"]), d.get("meta", {}))
 
     def save(self, path: str):

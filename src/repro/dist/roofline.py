@@ -71,6 +71,8 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
 def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
                      cache_tokens: int = 0, tp_size: int = 1,
                      avg_weight_bits: float = 8.0,
+                     kv_bits: float = 16.0,
+                     w_bits_total: Optional[float] = None,
                      chip: ChipSpec = DEFAULT_CHIP) -> dict:
     """Analytic three-term roofline for ONE continuous-batching decode step.
 
@@ -79,12 +81,19 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
 
       compute_s     2 * macs * n_slots / peak_flops (per chip: megatron
                     row+column parallel splits the matmuls over tp)
-      memory_s      (weight bytes at avg_weight_bits + KV-cache bytes
-                    actually attended, i.e. cache_tokens rows per slot,
-                    both sharded over tp) / hbm_bytes_s — decode re-reads
-                    every weight per token, so this term usually dominates
+      memory_s      (weight bytes + KV-cache bytes actually attended, i.e.
+                    cache_tokens rows per slot, both sharded over tp)
+                    / hbm_bytes_s — decode re-reads every weight per token,
+                    so this term usually dominates
       collective_s  2 activation all-reduces per layer over the tp group
                     (megatron row+column parallel) / ici_bytes_s
+
+    The bytes term is bit-width aware, reflecting the quantized serving
+    runtime: ``w_bits_total`` is the exact packed weight-storage bits of a
+    searched policy (``MPQPolicy.size_bytes(qlayers) * 8``; falls back to
+    ``w_params * avg_weight_bits``), and ``kv_bits`` sizes a cache element
+    (16 = bf16, 8 = the int8 KV cache, which also charges its 4-byte
+    per-row per-head write-time scales).
 
     Returns the three terms plus ``step_s``/``dominant``.
     """
@@ -102,8 +111,16 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
 
     tp = max(tp_size, 1)
     compute_s = 2.0 * macs * n_slots / tp / chip.peak_flops
-    w_bytes = w_params * (avg_weight_bits / 8.0) / tp
-    kv_bytes = 2.0 * kv_rows * n_slots * cfg.kv_dim * n_kv_layers * 2 / tp
+    if w_bits_total is not None:
+        w_bytes = (w_bits_total / 8.0) / tp
+    else:
+        w_bytes = w_params * (avg_weight_bits / 8.0) / tp
+    kv_elems = 2.0 * kv_rows * n_slots * cfg.kv_dim * n_kv_layers
+    kv_bytes = kv_elems * (kv_bits / 8.0) / tp
+    if kv_bits <= 8:   # int8 KV: per-row per-head f32 scales ride along
+        n_heads_kv = max(cfg.kv_dim // max(cfg.hd, 1), 1)
+        kv_bytes += (2.0 * kv_rows * n_slots * n_heads_kv
+                     * n_kv_layers * 4.0 / tp)
     memory_s = (w_bytes + kv_bytes) / chip.hbm_bytes_s
     wire = (2.0 * 2 * cfg.n_layers * n_slots * cfg.d_model
             * 2 * (tp_size - 1) / max(tp_size, 1)) if tp_size > 1 else 0.0
@@ -120,6 +137,8 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
 def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
                           cache_tokens: int = 0, tp_size: int = 1,
                           avg_weight_bits: float = 8.0,
+                          kv_bits: float = 16.0,
+                          w_bits_total: Optional[float] = None,
                           chip: ChipSpec = DEFAULT_CHIP,
                           min_chunk: int = 16, max_chunk: int = 512) -> int:
     """Prefill-token budget per engine iteration, from the decode roofline.
@@ -135,6 +154,7 @@ def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
     """
     cost = decode_step_cost(cfg, n_slots, cache_tokens=cache_tokens,
                             tp_size=tp_size, avg_weight_bits=avg_weight_bits,
+                            kv_bits=kv_bits, w_bits_total=w_bits_total,
                             chip=chip)
     ceiling = max(cost["memory_s"], cost["collective_s"])
     headroom_s = max(ceiling - cost["compute_s"], 0.0)

@@ -105,6 +105,14 @@ def param_spec_fn(cfg: ModelConfig,
     ``param_name`` is the '/'-joined tree path ("body/0/wq/w"). Only
     leaves named "w" are projection weights; every other leaf (scale
     banks, norms, gates, mixing tables) replicates.
+
+    Packed serving-time weights (``runtime.packing.PackedLinear`` — leaf
+    names "codes"/"scale"/"s_a" under the projection key) fall through to
+    replication by the same rule: sub-byte codes are layout-packed along
+    the contraction dim, so tensor-parallel sharding of packed storage
+    needs per-shard packing (a named runtime follow-up, ROADMAP). The
+    int8 KV cache needs no rule here — ``decode_state_specs`` shards its
+    code/scale slot axis like any other decode-state leaf.
     """
     tps = axes.tp_size
 
@@ -160,8 +168,9 @@ def param_spec_fn(cfg: ModelConfig,
 
 
 def _path_name(path) -> str:
-    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                    for k in path)
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+        for k in path)
 
 
 def param_specs(cfg: ModelConfig, params, axes: MeshAxes):
@@ -215,7 +224,13 @@ def decode_state_specs(cfg: ModelConfig, state, axes: MeshAxes):
     index 1. Rank-(2+b) leaves cover the per-slot bookkeeping the engine
     adds (per-slot KVCache position rows (slots, cap), rank-2 recurrent
     hidden states); shared position vectors (cap,) and body-stacked shared
-    positions (repeats, cap) stay below the rank gate and replicate."""
+    positions (repeats, cap) stay below the rank gate and replicate.
+
+    Int8 KV caches (``runtime.kv_cache.QuantKVCache``) need no special
+    casing: their code tensors (slots, cap, KV, hd) and per-head scale
+    tensors (slots, cap, KV) clear the same rank gate and shard on the
+    slot dim, and the quantized runtime's flat per-site state ("sites"
+    segment, no stack dim) takes the b = 0 branch."""
     def one(path, leaf):
         shape = tuple(leaf.shape)
         rank = len(shape)

@@ -63,6 +63,15 @@ def quant_matmul(x_q, w_q, s_x, s_w, blocks=_qmm.DEFAULT_BLOCKS):
                              interpret=_interpret_default())
 
 
+def quant_matmul_w4(x_q, w_p, s_x, s_w, *, k=None, blocks=_qmm.DEFAULT_BLOCKS):
+    """(M,K) int8 x nib4-packed (K/2,N) uint8 int4 weights -> (M,N) f32.
+    The weight nibbles unpack in the kernel's VMEM prologue."""
+    return _qmm.quant_matmul_w4(x_q, w_p, jnp.asarray(s_x, jnp.float32),
+                                jnp.asarray(s_w, jnp.float32), k=k,
+                                blocks=blocks,
+                                interpret=_interpret_default())
+
+
 def quantize_int8(v, s, bits: int = 8):
     """Round v/s to the signed `bits`-wide integer grid, stored as int8."""
     qmax = 2 ** (bits - 1) - 1

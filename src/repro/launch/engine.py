@@ -1,19 +1,29 @@
 """Continuous-batching decode engine (ROADMAP item 3).
 
-The engine turns ``repro.models.lm``'s prefill/decode passes into a
-servable system: ``slots`` concurrent sequences share one jitted decode
-step over per-slot KV caches (``init_decode_state(per_slot=True)`` — the
-slot axis is what ``dist.sharding.decode_state_specs`` shards over ``dp``),
-and a ``repro.launch.scheduler.Scheduler`` decides admission. A finished
+The engine turns a model's prefill/decode passes into a servable system:
+``slots`` concurrent sequences share one jitted decode step over per-slot
+KV caches (``init_decode_state(per_slot=True)`` — the slot axis is what
+``dist.sharding.decode_state_specs`` shards over ``dp``), and a
+``repro.launch.scheduler.Scheduler`` decides admission. A finished
 sequence frees its slot mid-flight, so a staggered workload completes in
 strictly fewer decode steps than padding everything to the max length.
+
+The model behind the engine is pluggable: a *model adapter* supplies
+``prefill`` / ``decode`` / ``init_state`` / ``state_per_slot``. The default
+``LMAdapter`` is the fake-quant ``repro.models.lm`` graph; the quantized
+serving runtime (``repro.runtime.session.QuantizedSession``) is the
+packed-weights implementation of the same interface, which is how
+``serve --policy`` runs a searched ``MPQPolicy`` through this engine
+unchanged.
 
 Execution model (host loop, three jitted device functions):
 
 * ``prefill``  — one request at a time, whole prompt, ``prefill_cap`` sized
   to the slot's cache. Recompiles per distinct prompt length (the jit cache
-  keys on shape), which is the standard serving trade-off; bucket prompt
-  lengths upstream if that matters.
+  keys on shape); ``EngineConfig.bucket_prompts`` rounds prompts up to
+  power-of-two buckets (``scheduler.bucket_length``) so at most
+  ``log2(cache_len)`` shapes ever compile — pad tokens sit after the
+  prompt, logits read at the true last position, pad KV rows invalidated.
 * ``insert``  — writes the prefilled per-layer state into slot row ``i``
   (``dynamic_update_slice`` on the slot axis; axis 1 for body-stacked
   segments, axis 0 elsewhere).
@@ -21,6 +31,11 @@ Execution model (host loop, three jitted device functions):
   vector. Free slots ride along at position -1: their row writes land with
   position -1 (never valid to attend), so an evicted slot can never leak KV
   entries into a later occupant — admission overwrites the whole row anyway.
+
+``EngineConfig.kv_quant`` flips the per-slot KV caches to int8 codes with
+per-head write-time scales (``repro.runtime.kv_cache``), halving decode
+HBM traffic per cache element; the roofline-driven prefill budget sees the
+quantized bytes through ``decode_step_cost(kv_bits=8)``.
 
 Inactive slots still occupy compute (the decode batch is static — standard
 for continuous-batching engines); the win is scheduling, measured by
@@ -39,7 +54,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist import roofline
 from repro.dist.axes import NO_AXES, MeshAxes
-from repro.launch.scheduler import Completion, Request, Scheduler
+from repro.launch.scheduler import (
+    Completion,
+    Request,
+    Scheduler,
+    bucket_length,
+)
 from repro.models import attention as attn
 from repro.models import lm
 
@@ -56,6 +76,9 @@ class EngineConfig:
     state_dtype: Any = jnp.float32
     max_iters: int = 100_000  # hard stop for the host loop
     chip: roofline.ChipSpec = roofline.DEFAULT_CHIP
+    kv_quant: str = "none"  # "none" | "int8" | "fake" (reference numerics)
+    bucket_prompts: bool = False  # pow-2 prompt padding to bound re-jits
+    bucket_min: int = 8  # smallest prompt bucket
 
 
 @dataclasses.dataclass
@@ -66,6 +89,7 @@ class EngineStats:
     padded_slot_steps: int = 0  # sum of *occupied* slots (fixed pads to max)
     prefill_calls: int = 0
     prefill_tokens: int = 0
+    prefill_compiles: int = 0  # distinct prompt shapes fed to the jit cache
     admitted: int = 0
     completed: int = 0
     tokens_generated: int = 0
@@ -86,6 +110,60 @@ class EngineStats:
         d["decode_tokens_per_s"] = self.decode_tokens_per_s
         d["total_tokens_per_s"] = self.total_tokens_per_s
         return d
+
+
+class LMAdapter:
+    """Default model adapter: the fake-quant ``repro.models.lm`` graph.
+
+    Anything exposing this interface (plus the optional ``kv_quant`` /
+    ``w_bits_total`` accounting attributes) can serve through the engine —
+    see ``repro.runtime.session.QuantizedSession`` for the packed
+    mixed-precision implementation.
+    """
+
+    def __init__(self, cfg: ModelConfig, bits, ctx, axes: MeshAxes = NO_AXES):
+        self.cfg = cfg
+        self.bits = bits
+        self.ctx = ctx
+        self.axes = axes
+
+    @property
+    def kv_quant(self) -> str:
+        return self.ctx.kv_quant
+
+    @property
+    def w_bits_total(self) -> Optional[float]:
+        return None  # fp/fake-quant weights: roofline uses avg_weight_bits
+
+    def prefill(self, params, inputs, *, prefill_cap, true_len=None):
+        return lm.apply_prefill(
+            params,
+            self.cfg,
+            inputs,
+            self.bits,
+            self.ctx,
+            self.axes,
+            prefill_cap=prefill_cap,
+            true_len=true_len,
+        )
+
+    def decode(self, params, tok, pos, state):
+        return lm.apply_decode(
+            params, self.cfg, tok, pos, state, self.bits, self.ctx, self.axes
+        )
+
+    def init_state(self, batch, capacity, dtype, per_slot=True):
+        return lm.init_decode_state(
+            self.cfg,
+            batch,
+            capacity,
+            dtype=dtype,
+            per_slot=per_slot,
+            kv_quant="int8" if self.ctx.kv_quant == "int8" else "none",
+        )
+
+    def state_per_slot(self, row):
+        return lm.decode_state_per_slot(row)
 
 
 class _Slot:
@@ -114,16 +192,31 @@ class DecodeEngine:
         axes: MeshAxes = NO_AXES,
         ecfg: Optional[EngineConfig] = None,
         scheduler: Optional[Scheduler] = None,
+        adapter=None,
     ):
         if cfg.encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode step")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg or EngineConfig()
+        if adapter is None:
+            if self.ecfg.kv_quant != "none" and ctx.kv_quant == "none":
+                ctx = dataclasses.replace(ctx, kv_quant=self.ecfg.kv_quant)
+            adapter = LMAdapter(cfg, bits, ctx, axes)
+        self.adapter = adapter
+
+        kv_mode = getattr(adapter, "kv_quant", self.ecfg.kv_quant)
+        kv_bits = (
+            8.0
+            if kv_mode == "int8"
+            else 8.0 * np.dtype(self.ecfg.state_dtype).itemsize
+        )
         chunk = self.ecfg.prefill_chunk or roofline.suggest_prefill_chunk(
             cfg,
             self.ecfg.slots,
             cache_tokens=self.ecfg.cache_len,
+            kv_bits=kv_bits,
+            w_bits_total=getattr(adapter, "w_bits_total", None),
             chip=self.ecfg.chip,
         )
         self.prefill_chunk = int(chunk)
@@ -131,23 +224,41 @@ class DecodeEngine:
         self.stats = EngineStats()
         self.slots: List[Optional[_Slot]] = [None] * self.ecfg.slots
         self.completions: Dict[int, Completion] = {}
-        self.state = lm.init_decode_state(
-            cfg,
+        self.state = adapter.init_state(
             self.ecfg.slots,
             self.ecfg.cache_len,
             dtype=self.ecfg.state_dtype,
             per_slot=True,
         )
 
+        # prompt-length bucketing bounds prefill recompiles, but padded
+        # prompt tokens would perturb recurrent state (rwkv/rec scans run
+        # over them) and sliding-window caches (pads evict real rows), so
+        # it only engages for full-attention schedules
+        self._bucket = bool(self.ecfg.bucket_prompts)
+        if self._bucket:
+            kinds = {s.kind for s in lm.iter_sites(cfg)}
+            windowed = bool(cfg.sliding_window or cfg.local_window)
+            if (kinds & {"rwkv", "rec"}) or windowed:
+                self._bucket = False
+        self._prefill_shapes: set = set()
+
         cache_len = self.ecfg.cache_len
 
-        def prefill(p, inputs):
-            return lm.apply_prefill(
-                p, cfg, inputs, bits, ctx, axes, prefill_cap=cache_len
-            )
+        if self._bucket:
+
+            def prefill(p, inputs, true_len):
+                return adapter.prefill(
+                    p, inputs, prefill_cap=cache_len, true_len=true_len
+                )
+
+        else:
+
+            def prefill(p, inputs):
+                return adapter.prefill(p, inputs, prefill_cap=cache_len)
 
         def decode(p, tok, pos, state):
-            return lm.apply_decode(p, cfg, tok, pos, state, bits, ctx, axes)
+            return adapter.decode(p, tok, pos, state)
 
         def insert(full, row, slot):
             def one(path, f, r):
@@ -161,7 +272,7 @@ class DecodeEngine:
 
         def evict(state, slot):
             def one(c):
-                if not isinstance(c, attn.KVCache):
+                if not isinstance(c, attn.CACHE_TYPES):
                     return c
                 axis = c.pos.ndim - 2  # slot axis: 0 plain, 1 body-stacked
                 empty_shape = list(c.pos.shape)
@@ -173,7 +284,7 @@ class DecodeEngine:
                 return c._replace(pos=pos)
 
             return jax.tree.map(
-                one, state, is_leaf=lambda x: isinstance(x, attn.KVCache)
+                one, state, is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES)
             )
 
         self._prefill = jax.jit(prefill)
@@ -191,8 +302,7 @@ class DecodeEngine:
         self.stats = EngineStats()
         self.slots = [None] * self.ecfg.slots
         self.completions = {}
-        self.state = lm.init_decode_state(
-            self.cfg,
+        self.state = self.adapter.init_state(
             self.ecfg.slots,
             self.ecfg.cache_len,
             dtype=self.ecfg.state_dtype,
@@ -257,19 +367,34 @@ class DecodeEngine:
             self._finish(idx, now)
 
     def _admit(self, req: Request, idx: int, now: int) -> None:
-        inputs = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
+        toks = np.asarray(req.tokens, np.int32)
+        plen = req.prompt_len
+        if self._bucket:
+            blen = min(
+                bucket_length(plen, self.ecfg.bucket_min), self.ecfg.cache_len
+            )
+            if blen > plen:
+                toks = np.pad(toks, (0, blen - plen))
+        inputs = {"tokens": jnp.asarray(toks)[None, :]}
         if req.extra_inputs:
             inputs.update(
                 {k: jnp.asarray(v)[None] for k, v in req.extra_inputs.items()}
             )
         t0 = time.time()
-        logits, row = self._prefill(self.params, inputs)
-        row = lm.decode_state_per_slot(row)
+        if self._bucket:
+            logits, row = self._prefill(
+                self.params, inputs, jnp.asarray(plen, jnp.int32)
+            )
+        else:
+            logits, row = self._prefill(self.params, inputs)
+        self._prefill_shapes.add(int(toks.shape[-1]))
+        self.stats.prefill_compiles = len(self._prefill_shapes)
+        row = self.adapter.state_per_slot(row)
         self.state = self._insert(self.state, row, jnp.asarray(idx, jnp.int32))
         first = int(jax.block_until_ready(jnp.argmax(logits[0], -1)))
         self.stats.t_prefill_s += time.time() - t0
         self.stats.prefill_calls += 1
-        self.stats.prefill_tokens += req.prompt_len
+        self.stats.prefill_tokens += plen
         self.stats.admitted += 1
         self.slots[idx] = _Slot(req, first, now)
         if req.max_new == 1 or first == self.ecfg.eos_id:

@@ -36,6 +36,23 @@ import numpy as np
 POLICIES = ("continuous", "continuous-sjf", "fixed")
 
 
+def bucket_length(n: int, min_bucket: int = 8) -> int:
+    """Round a prompt length up to its power-of-two bucket (>= min_bucket).
+
+    The engine pads bucketed prompts to this length so the jitted prefill
+    compiles once per bucket instead of once per distinct prompt length —
+    the recompile bound that matters once the quantized runtime jits per
+    shape. Padding sits at the END of the prompt: causal attention means no
+    real token ever attends a pad, logits are read at the true last
+    position, and pad KV rows are invalidated
+    (``lm.apply_prefill(true_len=...)``).
+    """
+    b = max(int(min_bucket), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
 class Request(NamedTuple):
     """One serving request: a prompt and a generation budget."""
 

@@ -8,13 +8,19 @@ roofline-driven prefill/decode interleave. ``--compare`` (implied by
 ``--smoke``) runs the same request set under both schedules, checks the
 generated tokens are identical, and reports the decode steps saved.
 
-Also demonstrates the int8 execution path: the searched per-layer bits all
-land on the int8 grid, so a projection executes as
-``quant_matmul(int8, int8) * s_x * s_w`` — bit-exact with the fake-quant
-training graph (validated here and in tests/test_kernels.py).
+``--policy <searched.json>`` switches to the quantized serving runtime:
+the policy compiles into a ``repro.runtime.session.QuantizedSession``
+(weights quantized onto the searched per-layer grids, sub-8-bit codes
+bit-packed, int8 KV-cache slots, prompt-length bucketing) and serves
+through the same engine. With ``--smoke`` that path is gated hard: greedy
+tokens must be identical to a reference engine running the fake-quant
+training graph, and measured packed HBM bytes must land within 5% of
+``MPQPolicy.size_bytes``.
 
 Examples:
   python -m repro.launch.serve --smoke
+  python -m repro.launch.serve --write-demo-policy searched.json
+  python -m repro.launch.serve --smoke --policy searched.json
   python -m repro.launch.serve --arch limpq-demo --requests 8 --slots 4 \
       --prompt-len 32 --gen 16 --stagger --compare
 """
@@ -79,6 +85,88 @@ def print_stats(label, eng):
     )
 
 
+def demo_mixed_policy(cfg, meta=None):
+    """A mixed MPQPolicy cycling the searched widths over the arch's QLayer
+    table — a deterministic stand-in for an ILP search result. The serve
+    ``--policy`` smoke and ``benchmarks/quant_serve_bench.py`` (whose
+    checked-in baseline pins the exact bit assignment) must share this one
+    builder."""
+    ql = lm.enumerate_qlayers(cfg)
+    bits = sorted(int(b) for b in cfg.bits)
+    n = len(bits)
+    return MPQPolicy(
+        {q.name: bits[i % n] for i, q in enumerate(ql)},
+        {q.name: bits[(i + 1) % n] for i, q in enumerate(ql)},
+        meta=dict(meta or {}, kind="demo-mixed", arch=cfg.name))
+
+
+def write_demo_policy(path, arch="limpq-demo", smoke=True):
+    """Write a ``demo_mixed_policy`` json so the ``--policy`` serving path
+    can be exercised without running the search."""
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    policy = demo_mixed_policy(cfg, meta={"smoke": smoke})
+    policy.save(path)
+    print(f"wrote demo policy for {cfg.name} ({len(policy.w_bits)} layers) "
+          f"-> {path}")
+    return policy
+
+
+def serve_quantized(args, cfg, params, ctx, reqs, cache_len):
+    """The ``--policy`` path: pack a searched policy into a
+    ``QuantizedSession`` and serve it through the engine. With --smoke,
+    gate token identity vs the fake-quant reference graph and packed HBM
+    bytes vs the policy's accounting."""
+    from repro.runtime.session import QuantizedSession, summarize
+
+    policy = MPQPolicy.load(args.policy)
+    kv = "none" if args.kv == "fp" else "int8"
+    sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+                            kv_quant=kv)
+    ecfg = EngineConfig(slots=args.slots, cache_len=cache_len,
+                        policy=args.schedule, kv_quant=kv,
+                        bucket_prompts=not args.no_bucket)
+    eng = DecodeEngine(sess.params, cfg, None, ctx, NO_AXES, ecfg,
+                       adapter=sess)
+    eng.submit_all(reqs)
+    completions = eng.run()
+    print_stats(f"quantized/{args.schedule}", eng)
+    s = summarize(sess)
+    print(f"packed weights: {s['packed_bytes']} B "
+          f"(+{s['scale_bytes']} B scales) vs policy accounting "
+          f"{s['policy_bytes']:.0f} B (x{s['packed_vs_policy']:.3f}) | "
+          f"{s['compression_vs_fp32']:.2f}x smaller than fp32 | "
+          f"kv={s['kv_quant']} | prefill shapes compiled: "
+          f"{eng.stats.prefill_compiles}")
+
+    if args.smoke or args.compare:
+        # reference: the fake-quant training graph (scanned body) through
+        # the same engine; int8 slots reference as quantize-dequantize fp
+        bits = lm.bits_from_policy(cfg, policy)
+        ref_ecfg = EngineConfig(slots=args.slots, cache_len=cache_len,
+                                policy=args.schedule,
+                                kv_quant="fake" if kv == "int8" else "none")
+        ref = DecodeEngine(params, cfg, bits, ctx, NO_AXES, ref_ecfg)
+        ref.submit_all(reqs)
+        ref_out = ref.run()
+        mismatch = [r.rid for r in completions.values()
+                    if ref_out[r.rid].tokens != r.tokens]
+        if mismatch:
+            raise SystemExit("packed runtime diverged from the fake-quant "
+                             f"reference graph: rids {mismatch}")
+        print("greedy tokens identical with the fake-quant reference graph "
+              f"({len(completions)} requests)")
+        ratio = s["packed_vs_policy"]
+        if args.smoke and abs(ratio - 1.0) > 0.05:
+            raise SystemExit(
+                f"packed HBM bytes {s['packed_bytes']} off policy "
+                f"accounting {s['policy_bytes']:.0f} by more than 5% "
+                f"(x{ratio:.3f})")
+        if args.smoke:
+            print(f"packed HBM bytes within 5% of MPQPolicy.size_bytes "
+                  f"(x{ratio:.3f})")
+    return eng, completions
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="limpq-demo")
@@ -93,10 +181,25 @@ def main(argv=None):
     ap.add_argument("--arrive-every", type=int, default=0)
     ap.add_argument("--compare", action="store_true",
                     help="run continuous AND fixed; check token identity")
-    ap.add_argument("--policy", default=None, help="MPQPolicy json path")
+    ap.add_argument("--policy", default=None,
+                    help="MPQPolicy json path: serve it through the packed "
+                         "quantized runtime (repro.runtime.session)")
+    ap.add_argument("--kv", default="int8", choices=("int8", "fp"),
+                    help="KV-cache storage for the --policy runtime")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="disable prompt-length bucketing (--policy path)")
+    ap.add_argument("--write-demo-policy", default=None, metavar="PATH",
+                    help="write a mixed demo MPQPolicy json and exit")
     ap.add_argument("--uniform-bits", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.write_demo_policy:
+        # layer names depend on the config size, so the policy must be
+        # written for the same variant (--smoke or full) it will serve
+        write_demo_policy(args.write_demo_policy, args.arch,
+                          smoke=args.smoke)
+        return
 
     if args.smoke:
         if args.schedule == "fixed":
@@ -115,16 +218,20 @@ def main(argv=None):
     params = lm.init_params(rng, cfg)
     ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
                             compute_dtype=jnp.float32)
-    ql = lm.enumerate_qlayers(cfg)
-    policy = (MPQPolicy.load(args.policy) if args.policy
-              else MPQPolicy.uniform(ql, args.uniform_bits))
-    bits = lm.bits_from_policy(cfg, policy, ql)
 
     data = SyntheticLM(cfg)
     reqs = build_requests(data, args.requests, args.prompt_len, args.gen,
                           stagger=args.stagger,
                           arrive_every=args.arrive_every)
     cache_len = args.cache_len or (args.prompt_len + args.gen)
+
+    if args.policy:
+        serve_quantized(args, cfg, params, ctx, reqs, cache_len)
+        return
+
+    ql = lm.enumerate_qlayers(cfg)
+    policy = MPQPolicy.uniform(ql, args.uniform_bits)
+    bits = lm.bits_from_policy(cfg, policy, ql)
 
     eng = None
     if args.compare and args.schedule != "fixed":

@@ -21,6 +21,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import kv_cache as qkv
+from repro.runtime.kv_cache import QuantKVCache
+
 Array = jax.Array
 NEG_INF = -1e30
 
@@ -347,8 +350,18 @@ class KVCache(NamedTuple):
     pos: Array    # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
 
 
+# Both decode-time cache containers: the fp ring buffer and the int8 one
+# (`runtime.kv_cache.QuantKVCache`). Engine/state plumbing that only needs
+# `.pos` and the slot axis treats them uniformly through this tuple.
+CACHE_TYPES = (KVCache, QuantKVCache)
+
+
 def init_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
-                  dtype=jnp.bfloat16, per_slot: bool = False) -> KVCache:
+                  dtype=jnp.bfloat16, per_slot: bool = False,
+                  quant: bool = False):
+    if quant:
+        return qkv.init_quant_kv_cache(batch, capacity, kv_heads, hd,
+                                       per_slot=per_slot)
     pos_shape = (batch, capacity) if per_slot else (capacity,)
     return KVCache(
         k=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
@@ -357,15 +370,47 @@ def init_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
     )
 
 
+def build_prefill_cache(k: Array, v: Array, S: int, cap: int,
+                        kv_quant: str = "none"):
+    """Store prefill k/v into a fresh decode cache of ``cap`` rows: the last
+    ``cap`` rows when the prompt overflows (sliding-window serving), else
+    the prompt plus ``-1``-position headroom for generated tokens.
+
+    ``kv_quant``: "none" stores fp rows; "fake" stores quantize-dequantized
+    fp rows (the reference graph's view of an int8 slot); "int8" stores the
+    codes + per-head write-time scales in a ``QuantKVCache``. "fake" and
+    "int8" dequantize to identical values by construction.
+    """
+    if cap <= S:
+        ks, vs = k[:, -cap:], v[:, -cap:]
+        pos = jnp.arange(S - cap, S, dtype=jnp.int32)
+    else:
+        pad = cap - S
+        ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                               jnp.full((pad,), -1, jnp.int32)])
+    if kv_quant == "none":
+        return KVCache(k=ks, v=vs, pos=pos)
+    if kv_quant == "fake":
+        return KVCache(k=qkv.fake_quant_kv(ks), v=qkv.fake_quant_kv(vs),
+                       pos=pos)
+    if kv_quant == "int8":
+        kq, ksc = qkv.quantize_rows(ks)
+        vq, vsc = qkv.quantize_rows(vs)
+        return QuantKVCache(k=kq, v=vq, k_scale=ksc, v_scale=vsc, pos=pos)
+    raise ValueError(f"unknown kv_quant mode {kv_quant!r}")
+
+
 def cache_per_slot(cache):
-    """Widen a shared-position KVCache to the per-slot layout.
+    """Widen a shared-position KV cache to the per-slot layout.
 
     Handles plain caches (k (B,Sc,KV,hd), pos (Sc,)) and body-stacked ones
-    (k (R,B,Sc,KV,hd), pos (R,Sc)). Non-KVCache leaves pass through, so it
-    can be ``jax.tree.map``-ped over a whole decode-state tree with
-    ``is_leaf=lambda x: isinstance(x, KVCache)``.
+    (k (R,B,Sc,KV,hd), pos (R,Sc)), fp and int8 alike. Other leaves pass
+    through, so it can be ``jax.tree.map``-ped over a whole decode-state
+    tree with ``is_leaf=lambda x: isinstance(x, CACHE_TYPES)``.
     """
-    if not isinstance(cache, KVCache):
+    if not isinstance(cache, CACHE_TYPES):
         return cache
     if cache.k.ndim == 4 and cache.pos.ndim == 1:
         pos = jnp.broadcast_to(cache.pos[None, :],
@@ -379,26 +424,19 @@ def cache_per_slot(cache):
     return cache._replace(pos=pos)
 
 
-def _decode_attention_slots(q: Array, cache: KVCache, k_new: Array,
-                            v_new: Array, pos: Array, *,
-                            window: Optional[int]):
-    """Per-slot one-token decode: row b writes at slot ``pos[b] % cap`` and
-    attends under its own causal/window/validity mask. Rows whose cache is
-    empty (all pos -1) softmax over a fully-masked row — finite output,
-    discarded by the engine for inactive slots."""
+def _row_update(c, n, s):
+    return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+
+
+def _attend_rows(q: Array, k: Array, v: Array, pos_arr: Array, pos: Array,
+                 window: Optional[int]) -> Array:
+    """Per-slot masked softmax over a full (written) cache: row b attends
+    under its own causal/window/validity mask. Rows whose cache is empty
+    (all pos -1) softmax over a fully-masked row — finite output, discarded
+    by the engine for inactive slots."""
     B, _, H, hd = q.shape
-    cap, KV = cache.k.shape[1], cache.k.shape[2]
+    KV = k.shape[2]
     G = H // KV
-    pos = jnp.asarray(pos, jnp.int32)
-    slot = jnp.mod(jnp.maximum(pos, 0), cap)
-
-    def row_update(c, n, s):
-        return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
-
-    k = jax.vmap(row_update)(cache.k, k_new, slot)
-    v = jax.vmap(row_update)(cache.v, v_new, slot)
-    pos_arr = jax.vmap(row_update)(cache.pos, pos[:, None], slot)
-
     qr = q.reshape(B, 1, KV, G, hd) * (hd ** -0.5)
     logits = _gqa_logits(qr, k)                         # (B,KV,G,1,cap)
     valid = (pos_arr >= 0) & (pos_arr <= pos[:, None])
@@ -407,26 +445,78 @@ def _decode_attention_slots(q: Array, cache: KVCache, k_new: Array,
     bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
     logits = logits + bias[:, None, None, None, :]
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(B, 1, H, hd)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(B, 1, H, hd)
+
+
+def _decode_attention_slots(q: Array, cache: KVCache, k_new: Array,
+                            v_new: Array, pos: Array, *,
+                            window: Optional[int]):
+    """Per-slot one-token decode: row b writes at slot ``pos[b] % cap``."""
+    cap = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = jnp.mod(jnp.maximum(pos, 0), cap)
+    k = jax.vmap(_row_update)(cache.k, k_new, slot)
+    v = jax.vmap(_row_update)(cache.v, v_new, slot)
+    pos_arr = jax.vmap(_row_update)(cache.pos, pos[:, None], slot)
+    out = _attend_rows(q, k, v, pos_arr, pos, window)
     return out, KVCache(k=k, v=v, pos=pos_arr)
 
 
-def decode_attention(q: Array, cache: KVCache, k_new: Array, v_new: Array,
+def _decode_attention_slots_quant(q: Array, cache: QuantKVCache,
+                                  k_new: Array, v_new: Array, pos: Array, *,
+                                  window: Optional[int]):
+    """Per-slot decode over an int8 cache: the new row quantizes with its
+    own per-head write-time scale, lands in the code/scale buffers, and the
+    whole cache dequantizes (exact per row) for the masked softmax."""
+    cap = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = jnp.mod(jnp.maximum(pos, 0), cap)
+    kq, ksc = qkv.quantize_rows(k_new)                  # (B,1,KV,hd) (B,1,KV)
+    vq, vsc = qkv.quantize_rows(v_new)
+    k = jax.vmap(_row_update)(cache.k, kq, slot)
+    v = jax.vmap(_row_update)(cache.v, vq, slot)
+    k_scale = jax.vmap(_row_update)(cache.k_scale, ksc, slot)
+    v_scale = jax.vmap(_row_update)(cache.v_scale, vsc, slot)
+    pos_arr = jax.vmap(_row_update)(cache.pos, pos[:, None], slot)
+    kf = qkv.dequantize(k, k_scale, k_new.dtype)
+    vf = qkv.dequantize(v, v_scale, v_new.dtype)
+    out = _attend_rows(q, kf, vf, pos_arr, pos, window)
+    return out, QuantKVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale,
+                             pos=pos_arr)
+
+
+def decode_attention(q: Array, cache, k_new: Array, v_new: Array,
                      pos, *, window: Optional[int]):
     """One-token decode: write (k_new, v_new) at slot pos % capacity, then
     attend over the cache. RoPE is applied before caching, so slot order is
     irrelevant to the softmax. With a per-slot cache (pos (B, Sc)) ``pos``
-    is a (B,) vector and each row masks independently."""
+    is a (B,) vector and each row masks independently. An int8
+    ``QuantKVCache`` stores codes + per-head scales instead of fp rows and
+    dequantizes exactly at attend time."""
+    quant = isinstance(cache, QuantKVCache)
     if cache.pos.ndim == 2:
-        return _decode_attention_slots(q, cache, k_new, v_new, pos,
-                                       window=window)
-    B, one, H, hd = q.shape
+        fn = _decode_attention_slots_quant if quant else _decode_attention_slots
+        return fn(q, cache, k_new, v_new, pos, window=window)
     cap = cache.k.shape[1]
     slot = jnp.mod(pos, cap)
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
     pos_arr = jax.lax.dynamic_update_slice_in_dim(
         cache.pos, jnp.asarray(pos, jnp.int32)[None], slot, axis=0)
     q_pos = jnp.asarray(pos, jnp.int32)[None]
+    if quant:
+        kq, ksc = qkv.quantize_rows(k_new)
+        vq, vsc = qkv.quantize_rows(v_new)
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_scale, ksc, slot, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(
+            cache.v_scale, vsc, slot, axis=1)
+        out = direct_attention(q, qkv.dequantize(k, k_scale, k_new.dtype),
+                               qkv.dequantize(v, v_scale, v_new.dtype),
+                               q_pos, pos_arr, causal=True, window=window)
+        return out, QuantKVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale,
+                                 pos=pos_arr)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
     out = direct_attention(q, k, v, q_pos, pos_arr, causal=True, window=window)
     return out, KVCache(k=k, v=v, pos=pos_arr)

@@ -35,6 +35,7 @@ from repro.core.policy import MPQPolicy
 from repro.dist.axes import NO_AXES, MeshAxes
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
+from repro.runtime import kv_cache as qkv
 from repro.models import recurrent as rec_mod
 from repro.models.common import activation, apply_norm, embed_init, norm_init
 from repro.models.quant_layers import (
@@ -345,6 +346,7 @@ def bits_from_policy(cfg: ModelConfig, policy: MPQPolicy,
                      qlayers: Optional[Sequence[QLayer]] = None) -> Dict[str, Any]:
     """Static per-layer bank indices from an ILP-searched MPQPolicy."""
     qlayers = qlayers if qlayers is not None else enumerate_qlayers(cfg)
+    policy.validate(qlayers, bits=cfg.bits)   # stale files fail loudly
     lut = {int(b): i for i, b in enumerate(cfg.bits)}
     per_seg: Dict[str, Dict[Tuple[str, ...], List[Tuple[int, int, int]]]] = {}
     for q in qlayers:
@@ -478,6 +480,11 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
         k = k.astype(ctx.compute_dtype)
         window = _attn_window(cfg, kind)
         if mode == "decode":
+            if ctx.kv_quant == "fake":
+                # reference view of an int8 slot: the new row is stored
+                # (and attended) quantize-dequantized, in an fp cache
+                k = qkv.fake_quant_kv(k)
+                v = qkv.fake_quant_kv(v)
             out, new_state = attn.decode_attention(q, state, k, v, pos,
                                                    window=window)
         else:
@@ -486,18 +493,8 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
             if mode == "prefill":
                 cap_total = prefill_cap or S
                 cap = min(cap_total, window) if window else cap_total
-                if cap <= S:
-                    new_state = attn.KVCache(
-                        k=k[:, -cap:], v=v[:, -cap:],
-                        pos=jnp.arange(S - cap, S, dtype=jnp.int32))
-                else:  # headroom for generated tokens (full-attn serving)
-                    pad = cap - S
-                    new_state = attn.KVCache(
-                        k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
-                        v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
-                        pos=jnp.concatenate([
-                            jnp.arange(S, dtype=jnp.int32),
-                            jnp.full((pad,), -1, jnp.int32)]))
+                new_state = attn.build_prefill_cache(k, v, S, cap,
+                                                     kv_quant=ctx.kv_quant)
             else:
                 new_state = None
         out = axes.shard(out, "dp", None, "th", None)
@@ -680,15 +677,53 @@ def loss_fn(params, cfg: ModelConfig, inputs, bits, ctx: QuantContext,
     return loss, {"ce": ce, "moe_aux": aux, "loss": loss}
 
 
+def trim_decode_state(states, true_len):
+    """Invalidate KV rows at positions >= ``true_len`` (fp and int8 caches
+    alike). Used by bucketed prefill: a prompt padded at the end to a
+    power-of-two length leaves pad-token rows in the cache whose positions
+    would otherwise look valid to future decode steps. Non-cache state
+    (recurrent, cross-attn image KV) passes through — bucketed prefill is
+    gated to attention-only schedules upstream."""
+    tl = jnp.asarray(true_len, jnp.int32)
+
+    def one(c):
+        if isinstance(c, attn.CACHE_TYPES):
+            return c._replace(pos=jnp.where(c.pos < tl, c.pos, -1))
+        return c
+
+    return jax.tree.map(one, states,
+                        is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES))
+
+
+def finish_prefill(x, states, params, cfg: ModelConfig, ctx: QuantContext,
+                   axes: MeshAxes, true_len=None):
+    """Shared prefill epilogue (the bucketing contract lives HERE, for both
+    the fake-quant graph and the packed runtime session): read logits at
+    the true last position and, for a padded (bucketed) prompt, invalidate
+    the cache rows holding pad tokens. Returns (logits (B,V), states)."""
+    if true_len is None:
+        x_last = x[:, -1:]
+    else:
+        tl = jnp.asarray(true_len, jnp.int32)
+        x_last = jax.lax.dynamic_slice_in_dim(x, tl - 1, 1, axis=1)
+        states = trim_decode_state(states, tl)
+    logits = lm_head(x_last, params, cfg, ctx, axes)
+    return logits[:, 0], states
+
+
 def apply_prefill(params, cfg: ModelConfig, inputs, bits, ctx: QuantContext,
-                  axes: MeshAxes = NO_AXES, prefill_cap=None):
+                  axes: MeshAxes = NO_AXES, prefill_cap=None, true_len=None):
     """Prompt pass. Returns (last-position logits (B,V), decode state).
-    `prefill_cap` sizes the KV cache (prompt + generation headroom)."""
+    `prefill_cap` sizes the KV cache (prompt + generation headroom).
+
+    ``true_len`` (traced scalar) marks the real prompt length inside a
+    padded (bucketed) input: logits are read at position ``true_len - 1``
+    and cache rows holding pad tokens are invalidated, so one compiled
+    prefill serves every prompt length in its bucket."""
     x, img_x = embed_inputs(params, cfg, inputs, ctx, axes)
     x, states, _ = run_layers(x, params, bits, cfg, ctx, axes, mode="prefill",
                               img_x=img_x, remat=False, prefill_cap=prefill_cap)
-    logits = lm_head(x[:, -1:], params, cfg, ctx, axes)
-    return logits[:, 0], states
+    return finish_prefill(x, states, params, cfg, ctx, axes, true_len)
 
 
 def apply_decode(params, cfg: ModelConfig, token: Array, pos, states, bits,
@@ -713,37 +748,53 @@ def apply_decode(params, cfg: ModelConfig, token: Array, pos, states, bits,
 # ===========================================================================
 # decode-state + input specs (ShapeDtypeStruct stand-ins for the dry-run)
 # ===========================================================================
+def init_site_state(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+                    dtype=jnp.bfloat16, per_slot: bool = False,
+                    kv_quant: str = "none"):
+    """Fresh decode state for ONE layer site of the given kind.
+
+    ``kv_quant="int8"`` (or "fake" — same fp layout, quantized values)
+    selects the int8 KV layout for self-attention sites; recurrent /
+    cross-attention state is unaffected."""
+    KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    W = cfg.lru_width or cfg.d_model
+    if kind in ("attn", "dense", "moe"):
+        window = _attn_window(cfg, kind)
+        cap = min(capacity, window) if window else capacity
+        return attn.init_kv_cache(batch, cap, KV, hd, dtype,
+                                  per_slot=per_slot,
+                                  quant=kv_quant == "int8")
+    if kind == "cross":
+        n = cfg.n_image_tokens
+        return (jnp.zeros((batch, n, KV, hd), dtype),
+                jnp.zeros((batch, n, KV, hd), dtype))
+    if kind == "rwkv":
+        hdr = cfg.rwkv_head_dim
+        return (jnp.zeros((batch, 1, cfg.d_model), dtype),
+                jnp.zeros((batch, H, hdr, hdr), jnp.float32),
+                jnp.zeros((batch, 1, cfg.d_model), dtype))
+    if kind == "rec":
+        return (jnp.zeros((batch, cfg.conv1d_width - 1, W), dtype),
+                jnp.zeros((batch, W), jnp.float32))
+    raise ValueError(kind)
+
+
 def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
-                      dtype=jnp.bfloat16, per_slot: bool = False):
+                      dtype=jnp.bfloat16, per_slot: bool = False,
+                      kv_quant: str = "none"):
     """Allocate decode state for a context of `capacity` tokens.
 
     ``per_slot=True`` lays the KV caches out for the continuous-batching
     engine: the batch dim becomes a slot axis and every cache carries its
     own (batch, cap) position row, so sequences at different positions can
-    share one decode step (``apply_decode`` with a (B,) pos vector)."""
+    share one decode step (``apply_decode`` with a (B,) pos vector).
+    ``kv_quant="int8"`` stores self-attention KV as int8 codes + per-head
+    scales (``runtime.kv_cache.QuantKVCache``)."""
     sched = build_schedule(cfg)
-    KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
-    W = cfg.lru_width or cfg.d_model
 
     def site_state(kind):
-        if kind in ("attn", "dense", "moe"):
-            window = _attn_window(cfg, kind)
-            cap = min(capacity, window) if window else capacity
-            return attn.init_kv_cache(batch, cap, KV, hd, dtype,
-                                      per_slot=per_slot)
-        if kind == "cross":
-            n = cfg.n_image_tokens
-            return (jnp.zeros((batch, n, KV, hd), dtype),
-                    jnp.zeros((batch, n, KV, hd), dtype))
-        if kind == "rwkv":
-            hdr = cfg.rwkv_head_dim
-            return (jnp.zeros((batch, 1, cfg.d_model), dtype),
-                    jnp.zeros((batch, H, hdr, hdr), jnp.float32),
-                    jnp.zeros((batch, 1, cfg.d_model), dtype))
-        if kind == "rec":
-            return (jnp.zeros((batch, cfg.conv1d_width - 1, W), dtype),
-                    jnp.zeros((batch, W), jnp.float32))
-        raise ValueError(kind)
+        return init_site_state(cfg, kind, batch, capacity, dtype=dtype,
+                               per_slot=per_slot, kv_quant=kv_quant)
 
     states = {"prefix": {}, "body": {}, "suffix": {}}
     for i, kind in enumerate(sched.prefix):
@@ -761,11 +812,11 @@ def init_decode_state(cfg: ModelConfig, batch: int, capacity: int,
 
 def decode_state_per_slot(states):
     """Widen a prefill-produced decode state to the per-slot layout: every
-    KVCache's shared position vector is broadcast to one row per batch
+    KV cache's shared position vector is broadcast to one row per batch
     entry. Non-cache leaves (recurrent states, cross-attn image KV) already
     carry the batch dim and pass through unchanged."""
     return jax.tree.map(attn.cache_per_slot, states,
-                        is_leaf=lambda x: isinstance(x, attn.KVCache))
+                        is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES))
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:

@@ -31,21 +31,29 @@ Array = jax.Array
 
 @dataclass(frozen=True)
 class QuantContext:
-    """Static quantization-mode switches threaded through the model."""
+    """Static quantization-mode switches threaded through the model.
+
+    ``kv_quant`` selects the decode-time KV-cache storage: "none" (fp),
+    "int8" (codes + per-head write-time scales, ``runtime.kv_cache``), or
+    "fake" (quantize-dequantize in an fp cache — the reference graph whose
+    tokens the int8 path must reproduce exactly).
+    """
     tables_w: BitTables
     tables_a: BitTables
     enabled: bool = True
     quantize_acts: bool = True
     compute_dtype: jnp.dtype = jnp.bfloat16
+    kv_quant: str = "none"
 
     @staticmethod
     def make(bits, act_signed: bool, enabled: bool = True,
-             compute_dtype=jnp.bfloat16) -> "QuantContext":
+             compute_dtype=jnp.bfloat16, kv_quant: str = "none") -> "QuantContext":
         return QuantContext(
             tables_w=BitTables.make(bits, signed=True),
             tables_a=BitTables.make(bits, signed=act_signed),
             enabled=enabled,
             compute_dtype=compute_dtype,
+            kv_quant=kv_quant,
         )
 
     @property
@@ -117,7 +125,15 @@ def _maybe_quant_a(x: Array, p, a_idx, ctx: QuantContext) -> Array:
 
 def qeinsum(eqn: str, x: Array, p, bits, ctx: QuantContext) -> Array:
     """Quantized einsum. `bits` is None (fp) or a dict {"w": idx, "a": idx}
-    of scalar bank indices (python ints or traced)."""
+    of scalar bank indices (python ints or traced).
+
+    When `p` is a packed serving-time weight (``runtime.packing
+    .PackedLinear``) instead of a fake-quant param dict, the matmul routes
+    through the runtime kernel dispatch; the searched bit-widths are baked
+    into the packed leaf, so `bits` is ignored."""
+    if not isinstance(p, dict):
+        from repro.runtime.dispatch import packed_qeinsum
+        return packed_qeinsum(eqn, x, p, ctx)
     w_idx = None if bits is None else bits["w"]
     a_idx = None if bits is None else bits["a"]
     xq = _maybe_quant_a(x, p, a_idx, ctx)

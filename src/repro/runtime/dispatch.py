@@ -1,0 +1,180 @@
+"""Per-layer kernel dispatch for packed mixed-precision matmuls.
+
+A ``PackedLinear`` carries its searched bit-widths as static metadata, so
+every call site resolves — at trace time — which execution route serves it:
+
+* ``pallas-w4``   — int4 weights in the ``nib4`` layout feed
+  ``kernels.quant_matmul.quant_matmul_w4`` directly: the packed bytes are
+  the kernel operand and nibbles unpack in the VMEM prologue (HBM never
+  sees unpacked codes).
+* ``pallas-int8`` — any searched width ≤ 8 lands on a subset of the int8
+  grid: codes unpack via XLA, activations quantize on the fly, and the
+  matmul runs int8 x int8 -> int32 on the MXU
+  (``kernels.quant_matmul.quant_matmul``).
+* ``dequant-fp``  — exact fallback for everything the kernels can't tile
+  (stacked MoE expert einsums, row-parallel ``(N,K)`` weight orientation,
+  per-channel scales, odd contraction dims): dequantize the codes and run
+  the same fp einsum as the fake-quant training graph. This route is
+  *bit-exact* with that graph — it is the default off-TPU and what the
+  serve smoke's token-identity gate runs on.
+
+The Pallas routes are int32-exact per the kernel contract but not bitwise
+equal to an fp einsum, so ``resolve`` only picks them on a TPU backend;
+``force_impl`` overrides for interpret-mode equivalence tests.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import fake_quant, lsq_grad_scale_factor
+from repro.runtime.packing import PackedLinear
+
+Array = jax.Array
+
+_FORCE: List[Optional[str]] = [None]
+
+
+@contextlib.contextmanager
+def force_impl(name: Optional[str]):
+    """Pin every dispatch to ``name`` (tests; None restores auto)."""
+    _FORCE.append(name)
+    try:
+        yield
+    finally:
+        _FORCE.pop()
+
+
+# ---------------------------------------------------------------------------
+# activation quantization (bit-exact with quant_layers._maybe_quant_a)
+# ---------------------------------------------------------------------------
+def _act_scale(x: Array, pl: PackedLinear) -> Array:
+    """The bank scale aligned to the activation — trailing-ones broadcast
+    for per-expert banks, exactly ``fake_quant_indexed``'s reshape."""
+    s = pl.s_a
+    if s.ndim:
+        s = s.reshape(s.shape + (1,) * (x.ndim - s.ndim))
+    return s
+
+
+def act_fake_quant(x: Array, pl: PackedLinear, ctx) -> Array:
+    """LSQ fake-quant of activations at the layer's searched a_bits, using
+    the trained bank scale — the identical op chain (scale floor, LSQ grad
+    wrapper, clip bounds, per-expert broadcast) as the training graph, for
+    bitwise parity."""
+    if not (ctx.enabled and ctx.quantize_acts):
+        return x
+    qmin, qmax = pl.a_range
+    g = lsq_grad_scale_factor(x.size, qmax)
+    return fake_quant(x, _act_scale(x, pl), qmin, qmax, grad_scale_factor=g)
+
+
+def act_codes(x: Array, pl: PackedLinear, ctx):
+    """Integer activation codes + scale for the int8 kernel routes
+    (per-tensor scale only — kernel-eligible layers are never stacked)."""
+    qmin, qmax = pl.a_range
+    s = jnp.maximum(pl.s_a.reshape(()), 1e-9)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), qmin, qmax)
+    return q.astype(jnp.int8), s
+
+
+# ---------------------------------------------------------------------------
+# eqn analysis
+# ---------------------------------------------------------------------------
+def _kernel_form(eqn: str) -> bool:
+    """True for ``...k,kn->...n`` einsums — weight is (K, N) with the
+    contraction on the activation's last dim (the only orientation the
+    Pallas kernels tile)."""
+    try:
+        lhs, out = eqn.split("->")
+        xs, ws = lhs.split(",")
+    except ValueError:
+        return False
+    return (len(ws) == 2 and xs[-1] == ws[0] and out[-1] == ws[1]
+            and ws[1] not in xs)
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+def _impl_dequant_fp(eqn: str, x: Array, pl: PackedLinear, ctx) -> Array:
+    xq = act_fake_quant(x, pl, ctx).astype(ctx.compute_dtype)
+    w = pl.dequant(ctx.compute_dtype)
+    return jnp.einsum(eqn, xq, w)
+
+
+def _scalar_scale(pl: PackedLinear) -> Array:
+    return pl.scale.reshape(-1)[0]
+
+
+def _kernel_call(eqn, x, pl, ctx, matmul):
+    xq, s_x = act_codes(x, pl, ctx)
+    m2 = xq.reshape(-1, xq.shape[-1])
+    out = matmul(m2, s_x)
+    return out.reshape(x.shape[:-1] + (out.shape[-1],)).astype(
+        ctx.compute_dtype)
+
+
+def _impl_pallas_int8(eqn: str, x: Array, pl: PackedLinear, ctx) -> Array:
+    from repro.kernels import ops
+    w_codes = pl.unpack()
+    return _kernel_call(
+        eqn, x, pl, ctx,
+        lambda m2, s_x: ops.quant_matmul(m2, w_codes, s_x,
+                                         _scalar_scale(pl)))
+
+
+def _impl_pallas_w4(eqn: str, x: Array, pl: PackedLinear, ctx) -> Array:
+    from repro.kernels import ops
+    return _kernel_call(
+        eqn, x, pl, ctx,
+        lambda m2, s_x: ops.quant_matmul_w4(m2, pl.codes, s_x,
+                                            _scalar_scale(pl),
+                                            k=pl.shape[-2]))
+
+
+REGISTRY: Dict[str, Callable] = {
+    "dequant-fp": _impl_dequant_fp,
+    "pallas-int8": _impl_pallas_int8,
+    "pallas-w4": _impl_pallas_w4,
+}
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+def kernel_eligible(eqn: str, pl: PackedLinear) -> Optional[str]:
+    """The Pallas route this (eqn, layer) pair could take, else None."""
+    if len(pl.shape) != 2 or not _kernel_form(eqn):
+        return None
+    if pl.per_channel:  # kernel epilogue takes a per-tensor scale (for now)
+        return None
+    if not pl.a_signed and pl.a_bits > 7:
+        return None  # unsigned 8-bit grid (qmax 255) overflows int8 codes
+    if pl.layout == "nib4" and pl.shape[-2] % 2 == 0:
+        return "pallas-w4"
+    if pl.w_bits <= 8:
+        return "pallas-int8"
+    return None
+
+
+def resolve(eqn: str, pl: PackedLinear, backend: Optional[str] = None) -> str:
+    """Pick the execution route for one packed matmul (see module doc)."""
+    if _FORCE[-1] is not None:
+        return _FORCE[-1]
+    backend = backend or jax.default_backend()
+    if backend != "tpu":
+        return "dequant-fp"
+    return kernel_eligible(eqn, pl) or "dequant-fp"
+
+
+def packed_qeinsum(eqn: str, x: Array, pl: PackedLinear, ctx,
+                   impl: Optional[str] = None) -> Array:
+    """Quantized einsum over a packed weight — the serving-time counterpart
+    of ``quant_layers.qeinsum`` (which routes here when it sees a
+    ``PackedLinear`` instead of a fake-quant param dict)."""
+    impl = impl or resolve(eqn, pl)
+    return REGISTRY[impl](eqn, x, pl, ctx)

@@ -1,0 +1,85 @@
+"""Int8 KV-cache quantization with per-head write-time scales.
+
+Decode-time KV rows are quantized at *write* time: each cached row keeps a
+per-head symmetric scale ``s = max|x| / 127`` (shape ``(..., Sc, KV)``), so
+dequantization is exact per row and independent of when later rows arrive —
+a "running" scale that never has to re-quantize history. HBM per cache row
+drops from ``2 * KV * hd`` bf16 bytes to ``KV * hd + 4 * KV`` (int8 codes +
+f32 scales), and the scheduler's roofline sees the difference through
+``dist.roofline.decode_step_cost(kv_bits=8)``.
+
+Numerics contract: ``dequantize(*quantize(x)) == fake_quant_kv(x)`` exactly
+— the serving engine with int8 slots is therefore token-identical to a
+reference engine that stores ``fake_quant_kv`` values in an fp cache
+(``QuantContext.kv_quant = "fake"``), which is how the serve smoke asserts
+the packed runtime against the fake-quant graph.
+
+``QuantKVCache`` mirrors ``models.attention.KVCache`` (same ``k``/``v``/
+``pos`` field names and both position layouts), so the engine's insert /
+evict / per-slot plumbing treats both through ``attention.CACHE_TYPES``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+KV_QMAX = 127.0          # symmetric int8 grid (−127..127; −128 unused)
+KV_SCALE_EPS = 1e-8
+
+
+class QuantKVCache(NamedTuple):
+    """Int8 decode-time ring buffer (see module docstring).
+
+    Position layouts match ``attention.KVCache``: shared ``pos (Sc,)`` or
+    per-slot ``pos (B, Sc)`` for the continuous-batching engine.
+    """
+
+    k: Array          # (B, Sc, KV, hd) int8 codes (body-stacked: (R, B, ...))
+    v: Array          # (B, Sc, KV, hd) int8 codes
+    k_scale: Array    # (B, Sc, KV) f32 per-row per-head write-time scale
+    v_scale: Array    # (B, Sc, KV) f32
+    pos: Array        # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
+
+
+def quantize_rows(x: Array) -> Tuple[Array, Array]:
+    """Quantize ``(..., hd)`` rows onto the symmetric int8 grid with one
+    scale per leading index (per token-row, per head)."""
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1) / KV_QMAX, KV_SCALE_EPS)
+    q = jnp.clip(jnp.round(x32 / s[..., None]), -KV_QMAX, KV_QMAX)
+    return q.astype(jnp.int8), s
+
+
+def dequantize(q: Array, s: Array, dtype=jnp.float32) -> Array:
+    """Exact inverse map of :func:`quantize_rows` codes -> values."""
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def fake_quant_kv(x: Array) -> Array:
+    """Value-level int8 KV quantization (quantize-dequantize in fp) — the
+    reference graph's view of what an int8 slot stores."""
+    q, s = quantize_rows(x)
+    return dequantize(q, s, x.dtype)
+
+
+def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
+                        per_slot: bool = False) -> QuantKVCache:
+    pos_shape = (batch, capacity) if per_slot else (capacity,)
+    return QuantKVCache(
+        k=jnp.zeros((batch, capacity, kv_heads, hd), jnp.int8),
+        v=jnp.zeros((batch, capacity, kv_heads, hd), jnp.int8),
+        k_scale=jnp.zeros((batch, capacity, kv_heads), jnp.float32),
+        v_scale=jnp.zeros((batch, capacity, kv_heads), jnp.float32),
+        pos=jnp.full(pos_shape, -1, jnp.int32),
+    )
+
+
+def cache_bytes(cache: QuantKVCache) -> int:
+    """Measured HBM bytes of one quantized cache (codes + scales)."""
+    import numpy as np
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in (cache.k, cache.v, cache.k_scale, cache.v_scale))

@@ -1,0 +1,282 @@
+"""Weight packing: searched-grid quantization + sub-8-bit bit-packing.
+
+The storage half of executing an ILP-searched ``MPQPolicy``: every searched
+projection is quantized onto its per-layer b-bit signed grid with the exact
+rounding of the fake-quant training graph (``round(clip(w/s, qmin, qmax))``
+with ``s = max(s, 1e-9)``), and the integer codes are bit-packed so HBM
+holds ``ceil(n * b / 8)`` bytes — matching ``MPQPolicy.size_bytes`` to
+within padding. Three storage layouts:
+
+* ``int8``      — b == 8: codes stored as int8 in the weight's own shape.
+* ``nib4``      — b == 4: two codes per byte along the contraction dim
+                  (``codes[k//2, n]``; low nibble = even k). This is the
+                  layout the ``kernels.quant_matmul.quant_matmul_w4``
+                  unpack-in-VMEM prologue consumes directly.
+* ``quad2``     — b == 2: four codes per byte along the contraction dim.
+* ``bitstream`` — any other b (3, 5, 6): little-endian bitstream over the
+                  row-major flattened codes, 1-D uint8.
+
+Codes are stored offset-binary (``u = q - qmin``) so packed bytes are
+unsigned; ``unpack_*`` restores the signed grid exactly (round-trip is
+property-tested in tests/test_runtime.py for odd channel counts).
+
+Scales are per-channel ``(out,)`` over the weight's last dim. The serving
+session fills them with the trained per-tensor indicator-bank scale
+broadcast per channel (bit-exact with the fake-quant graph); statistics
+per-channel scales (``per_channel=True``) trade that exactness for lower
+quantization error when no trained scale is available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import bit_range
+
+Array = jax.Array
+
+SCALE_EPS = 1e-9  # fake_quant's scale floor — must match for bit-exactness
+
+
+# ---------------------------------------------------------------------------
+# generic bitstream codec (any bits <= 8)
+# ---------------------------------------------------------------------------
+def pack_codes(q, bits: int, *, signed: bool = True) -> Array:
+    """Bit-pack integer codes ``q`` (values on the `bits`-wide grid) into a
+    little-endian uint8 bitstream of ``ceil(q.size * bits / 8)`` bytes."""
+    if not 1 <= bits <= 8:
+        raise ValueError(f"bits must be in [1, 8], got {bits}")
+    qmin, qmax = bit_range(bits, signed)
+    u = jnp.asarray(q, jnp.int32).reshape(-1) - int(qmin)
+    bitmat = (u[:, None] >> jnp.arange(bits, dtype=jnp.int32)) & 1
+    flat = bitmat.reshape(-1)
+    pad = (-flat.size) % 8
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.int32)])
+    weights = (1 << jnp.arange(8, dtype=jnp.int32))
+    return (flat.reshape(-1, 8) * weights).sum(-1).astype(jnp.uint8)
+
+
+def unpack_codes(codes, bits: int, n: int, *, signed: bool = True) -> Array:
+    """Exact inverse of :func:`pack_codes` -> ``(n,)`` int8 codes."""
+    qmin, _ = bit_range(bits, signed)
+    b = (jnp.asarray(codes, jnp.int32)[:, None] >> jnp.arange(8)) & 1
+    b = b.reshape(-1)[: n * bits].reshape(n, bits)
+    u = (b << jnp.arange(bits, dtype=jnp.int32)).sum(-1)
+    return (u + int(qmin)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# kernel-friendly nibble / crumb layouts (packed along the contraction dim)
+# ---------------------------------------------------------------------------
+def _pad_rows(q: Array, mult: int) -> Array:
+    k = q.shape[-2]
+    pad = (-k) % mult
+    if pad:
+        width = [(0, 0)] * q.ndim
+        width[-2] = (0, pad)
+        q = jnp.pad(q, width)  # code 0 rows; offset applied after padding
+    return q
+
+
+def pack_nib4(q: Array) -> Array:
+    """Signed int4 codes ``(..., K, N)`` -> ``(..., ceil(K/2), N)`` uint8,
+    two per byte along K (low nibble = even k), offset-binary (q + 8)."""
+    u = _pad_rows(jnp.asarray(q, jnp.int32) + 8, 2)
+    lo = u[..., 0::2, :]
+    hi = u[..., 1::2, :]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nib4(codes: Array, k: int) -> Array:
+    """Inverse of :func:`pack_nib4` -> ``(..., k, N)`` int8 codes."""
+    c = jnp.asarray(codes, jnp.int32)
+    lo = (c & 0xF) - 8
+    hi = (c >> 4) - 8
+    full = jnp.stack([lo, hi], axis=-2)              # (..., K2, 2, N)
+    shape = full.shape[:-3] + (2 * c.shape[-2], c.shape[-1])
+    return full.reshape(shape)[..., :k, :].astype(jnp.int8)
+
+
+def pack_quad2(q: Array) -> Array:
+    """Signed int2 codes ``(..., K, N)`` -> ``(..., ceil(K/4), N)`` uint8,
+    four per byte along K, offset-binary (q + 2)."""
+    u = _pad_rows(jnp.asarray(q, jnp.int32) + 2, 4)
+    parts = [u[..., i::4, :] << (2 * i) for i in range(4)]
+    return (parts[0] | parts[1] | parts[2] | parts[3]).astype(jnp.uint8)
+
+
+def unpack_quad2(codes: Array, k: int) -> Array:
+    """Inverse of :func:`pack_quad2` -> ``(..., k, N)`` int8 codes."""
+    c = jnp.asarray(codes, jnp.int32)
+    parts = [((c >> (2 * i)) & 0x3) - 2 for i in range(4)]
+    full = jnp.stack(parts, axis=-2)                 # (..., K4, 4, N)
+    shape = full.shape[:-3] + (4 * c.shape[-2], c.shape[-1])
+    return full.reshape(shape)[..., :k, :].astype(jnp.int8)
+
+
+def _layout_for(bits: int) -> str:
+    return {8: "int8", 4: "nib4", 2: "quad2"}.get(bits, "bitstream")
+
+
+# ---------------------------------------------------------------------------
+# PackedLinear — the packed param-tree leaf
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedLinear:
+    """One searched projection in deployable form.
+
+    ``codes``/``scale``/``s_a`` are pytree children (device arrays); the
+    grid metadata is static aux data, so a jitted function closing over a
+    packed param tree sees the bit-widths as compile-time constants —
+    exactly what the unpack/dispatch code needs.
+    """
+
+    codes: Array                      # packed weight codes (layout-dependent)
+    scale: Array                      # f32 dequant scale: (out,) per-channel
+    #                                   or (E,1,1) per-expert broadcast form
+    s_a: Array                        # f32 activation scale (trained bank):
+    #                                   () scalar or (E,) per-expert
+    w_bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    a_bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    a_signed: bool = dataclasses.field(metadata=dict(static=True), default=True)
+    layout: str = dataclasses.field(metadata=dict(static=True), default="int8")
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True),
+                                               default=())
+    per_channel: bool = dataclasses.field(metadata=dict(static=True),
+                                          default=False)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def packed_bytes(self) -> int:
+        """HBM bytes of the weight codes (scales reported separately)."""
+        return int(np.prod(self.codes.shape)) * self.codes.dtype.itemsize
+
+    @property
+    def scale_bytes(self) -> int:
+        return int(np.prod(self.scale.shape)) * self.scale.dtype.itemsize
+
+    @property
+    def a_range(self) -> Tuple[float, float]:
+        lo, hi = bit_range(self.a_bits, self.a_signed)
+        return float(lo), float(hi)
+
+    # -- codes --------------------------------------------------------------
+    def unpack(self) -> Array:
+        """Exact signed integer codes in the weight's original shape."""
+        n = int(np.prod(self.shape))
+        if self.layout == "int8":
+            return self.codes
+        if self.layout == "nib4":
+            return unpack_nib4(self.codes, self.shape[-2])
+        if self.layout == "quad2":
+            return unpack_quad2(self.codes, self.shape[-2])
+        return unpack_codes(self.codes, self.w_bits, n).reshape(self.shape)
+
+    def dequant(self, dtype=jnp.float32) -> Array:
+        """Dequantized weight — bit-exact with the fake-quant graph when
+        ``scale`` came from the trained indicator bank."""
+        q = self.unpack().astype(jnp.float32)
+        s = _broadcast_scale(self.scale, len(self.shape), self.shape)
+        return (q * s).astype(dtype)
+
+
+def _broadcast_scale(s: Array, w_ndim: int, w_shape) -> Array:
+    """Align a scale against a weight: scalars broadcast plainly; a
+    per-channel ``(out,)`` vector reshapes onto the LAST dim; anything of
+    the weight's own rank (e.g. per-expert ``(E, 1, 1)``, already shaped
+    like ``fake_quant_indexed``'s trailing-ones broadcast) passes through.
+    """
+    if s.ndim == 0:
+        return s
+    if s.ndim == w_ndim:
+        return s
+    if s.ndim == 1 and s.shape[0] == w_shape[-1]:
+        return s.reshape((1,) * (w_ndim - 1) + (-1,))
+    raise ValueError(f"scale shape {s.shape} does not align with weight "
+                     f"shape {tuple(w_shape)}")
+
+
+def quantize_to_grid(w: Array, bits: int, scale: Array) -> Array:
+    """``round(clip(w/s, qmin, qmax))`` on the signed `bits` grid — the
+    value map of ``core.quantizer.fake_quant`` (including its scale floor),
+    so ``codes * s == fake_quant(w, s)`` exactly."""
+    qmin, qmax = bit_range(bits, True)
+    s = jnp.maximum(jnp.asarray(scale, jnp.float32), SCALE_EPS)
+    s = _broadcast_scale(s, w.ndim, w.shape)
+    return jnp.round(jnp.clip(w.astype(jnp.float32) / s, qmin, qmax))
+
+
+def channel_scales(w: Array, bits: int) -> Array:
+    """Statistics per-channel scales over the last (output) dim:
+    ``max|w| / qmax`` reduced over every other axis."""
+    _, qmax = bit_range(bits, True)
+    red = tuple(range(w.ndim - 1))
+    s = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=red) / float(qmax)
+    return jnp.maximum(s, SCALE_EPS)
+
+
+def pack_linear(w: Array, w_bits: int, s_w, a_bits: int, s_a, *,
+                a_signed: bool = True,
+                per_channel: bool = False) -> PackedLinear:
+    """Quantize ``w`` onto its searched grid and bit-pack the codes.
+
+    ``s_w`` is the trained scale (the selected indicator-bank entry):
+    a scalar for plain projections, or — for expert-stacked tensors whose
+    banks select per expert — an array already shaped for the trailing-ones
+    broadcast (e.g. ``(E, 1, 1)`` against ``(E, K, N)``). With
+    ``per_channel=True`` it is ignored and statistics per-channel scales
+    are computed instead (not bit-exact vs the trained fake-quant graph —
+    see module docstring).
+    """
+    w = jnp.asarray(w)
+    out = w.shape[-1]
+    if per_channel:
+        scale = channel_scales(w, w_bits)
+    else:
+        s = jnp.maximum(jnp.asarray(s_w, jnp.float32), SCALE_EPS)
+        scale = jnp.broadcast_to(s.reshape(()), (out,)) if s.ndim == 0 \
+            else s
+    q = quantize_to_grid(w, w_bits, scale)
+    layout = _layout_for(w_bits)
+    if layout == "int8":
+        codes = q.astype(jnp.int8)
+    elif layout == "nib4":
+        codes = pack_nib4(q)
+    elif layout == "quad2":
+        codes = pack_quad2(q)
+    else:
+        codes = pack_codes(q, w_bits)
+    return PackedLinear(
+        codes=codes, scale=scale,
+        s_a=jnp.asarray(s_a, jnp.float32),
+        w_bits=int(w_bits), a_bits=int(a_bits), a_signed=bool(a_signed),
+        layout=layout, shape=tuple(int(d) for d in w.shape),
+        per_channel=bool(per_channel))
+
+
+# ---------------------------------------------------------------------------
+# tree-level accounting
+# ---------------------------------------------------------------------------
+def is_packed(leaf) -> bool:
+    return isinstance(leaf, PackedLinear)
+
+
+def packed_leaves(tree):
+    return [x for x in jax.tree.leaves(tree, is_leaf=is_packed)
+            if is_packed(x)]
+
+
+def tree_packed_bytes(tree) -> int:
+    """Measured HBM bytes of all packed weight codes in ``tree`` — the
+    number the serve smoke checks against ``MPQPolicy.size_bytes``."""
+    return sum(pl.packed_bytes for pl in packed_leaves(tree))
+
+
+def tree_scale_bytes(tree) -> int:
+    return sum(pl.scale_bytes for pl in packed_leaves(tree))

@@ -1,0 +1,277 @@
+"""QuantizedSession: compile a searched MPQPolicy into a servable model.
+
+This is the "searched policy -> deployed low-bit model" step. Construction
+packs once:
+
+1. validate the policy against the model's QLayer table (stale files fail
+   loudly),
+2. flatten the scan-stacked param tree into per-site subtrees (one per
+   ``lm.iter_sites`` entry — serving decode is one token, so unrolling
+   trades nothing and gives every site its *own* searched bit-width with
+   statically-shaped packed storage),
+3. for every searched projection, select the trained indicator-bank scales
+   at the policy's bit-widths and quantize + bit-pack the weight
+   (``runtime.packing.pack_linear``) — HBM then holds ``ceil(bits/8)``
+   bytes per weight, matching ``MPQPolicy.size_bytes`` to within padding.
+
+The session then exposes the engine's model-adapter interface (``prefill``
+/ ``decode`` / ``init_state`` / ``state_per_slot``), so
+``launch.serve --policy`` runs the packed model through the unmodified
+continuous-batching engine. Matmuls route through
+``runtime.dispatch.packed_qeinsum`` (Pallas int8/int4 kernels on TPU, the
+bit-exact dequant-then-fp fallback elsewhere).
+
+Numerics: with per-tensor bank scales (the default) and ``mode="packed"``,
+the dequantized weights and on-the-fly activation fake-quant reproduce the
+fake-quant training graph *bitwise* on the fallback route, so greedy
+tokens are asserted identical against an ``LMAdapter`` reference engine —
+including with int8 KV slots, whose reference is ``kv_quant="fake"``.
+``mode="reference"`` keeps fake-quant param dicts (same unrolled forward,
+no packing) for A/B debugging of the packing itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import MPQPolicy
+from repro.core.quantizer import (
+    bit_range,
+    grad_scale,
+    lsq_grad_scale_factor,
+)
+from repro.dist.axes import NO_AXES, MeshAxes
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+from repro.runtime import packing
+
+Array = jax.Array
+
+
+def _site_key(gidx: int) -> str:
+    return f"{gidx:03d}"
+
+
+def _get_path(tree, path: Tuple[str, ...]):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _set_path(tree, path: Tuple[str, ...], leaf):
+    for k in path[:-1]:
+        tree = tree[k]
+    tree[path[-1]] = leaf
+
+
+def effective_weight_scale(s_bank: Array, idx: int, numel: int, bits: int,
+                           w_ndim: Optional[int] = None) -> Array:
+    """The scale value the fake-quant training graph actually divides by:
+    bank entry (selected on the LAST axis — leading axes are expert
+    stacks) -> floor at 1e-9 -> LSQ grad-scale wrapper (identity in exact
+    arithmetic, replicated op-for-op for bitwise parity). Per-expert
+    selections are returned in the trailing-ones broadcast form
+    ``fake_quant_indexed`` uses (e.g. ``(E, 1, 1)`` for a rank-3 weight,
+    via ``w_ndim``)."""
+    qmax = float(bit_range(bits, True)[1])
+    sel = jnp.asarray(s_bank)[..., idx]
+    s = jnp.maximum(sel.astype(jnp.float32), 1e-9)
+    s = grad_scale(s, lsq_grad_scale_factor(numel, qmax))
+    if s.ndim and w_ndim is not None:
+        s = s.reshape(s.shape + (1,) * (w_ndim - s.ndim))
+    return s
+
+
+class QuantizedSession:
+    """A packed, policy-quantized model behind the engine adapter API."""
+
+    def __init__(self, cfg: ModelConfig, params, policy: MPQPolicy,
+                 ctx: Optional[QuantContext] = None,
+                 axes: MeshAxes = NO_AXES, *, mode: str = "packed",
+                 kv_quant: str = "int8", per_channel: bool = False):
+        if mode not in ("packed", "reference"):
+            raise ValueError(f"unknown session mode {mode!r}")
+        self.cfg = cfg
+        self.policy = policy
+        self.mode = mode
+        self.axes = axes
+        ctx = ctx or QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                                       compute_dtype=jnp.float32)
+        # the reference view of an int8 slot is quantize-dequantize in fp
+        kv_ctx = {"packed": kv_quant,
+                  "reference": "fake" if kv_quant == "int8" else kv_quant}
+        self.ctx = dataclasses.replace(ctx, kv_quant=kv_ctx[mode])
+        self._kv_quant = kv_quant
+        # per-channel statistics scales lower quantization error but break
+        # bitwise parity with the trained per-tensor indicator scales — the
+        # token-identity gate requires the default False
+        self.per_channel = bool(per_channel)
+
+        self.qlayers = lm.enumerate_qlayers(cfg)
+        policy.validate(self.qlayers, bits=cfg.bits)
+        self.sites = lm.iter_sites(cfg)
+        self._lut = {int(b): i for i, b in enumerate(cfg.bits)}
+        self.params = self._build_params(params)
+
+    # -- construction -------------------------------------------------------
+    def _site_params(self, params, site) -> Dict[str, Any]:
+        seg, idx = site.segment.split(".")
+        sub = params[seg][idx]
+        if seg == "body":
+            sub = jax.tree.map(lambda a: a[site.unit], sub)
+        else:
+            sub = jax.tree.map(lambda a: a, sub)   # private copy of the dicts
+        return sub
+
+    def _build_params(self, params) -> Dict[str, Any]:
+        by_site: Dict[int, List] = {}
+        for q in self.qlayers:
+            by_site.setdefault((q.segment, q.unit), []).append(q)
+
+        out: Dict[str, Any] = {
+            k: params[k] for k in params if k not in ("prefix", "body",
+                                                      "suffix")
+        }
+        sites_p: Dict[str, Any] = {}
+        self._site_bits: Dict[str, Any] = {}
+        for site in self.sites:
+            sp = self._site_params(params, site)
+            bits_d: Dict[str, Any] = {}
+            for q in by_site[(site.segment, site.unit)]:
+                leaf = _get_path(sp, q.path)
+                w_idx = self._lut[self.policy.w_bits[q.name]]
+                a_idx = self._lut[self.policy.a_bits[q.name]]
+                if self.mode == "packed":
+                    wb = int(self.policy.w_bits[q.name])
+                    s_w = effective_weight_scale(leaf["s_w"], w_idx,
+                                                 leaf["w"].size, wb,
+                                                 w_ndim=leaf["w"].ndim)
+                    pl = packing.pack_linear(
+                        leaf["w"], wb, s_w,
+                        int(self.policy.a_bits[q.name]),
+                        jnp.asarray(leaf["s_a"])[..., a_idx],
+                        a_signed=self.cfg.quant_act_signed,
+                        per_channel=self.per_channel)
+                    _set_path(sp, q.path, pl)
+                else:
+                    d: Dict[str, Any] = {}
+                    lm._nest(d, q.path, {"w": w_idx, "a": a_idx})
+                    # merged below via bits_d
+                    bits_d = _merge(bits_d, d)
+            key = _site_key(site.gidx)
+            sites_p[key] = sp
+            self._site_bits[key] = bits_d if self.mode == "reference" else None
+        out["sites"] = sites_p
+        return out
+
+    # -- accounting ---------------------------------------------------------
+    def packed_bytes(self) -> int:
+        """Measured HBM bytes of the packed weight codes."""
+        return packing.tree_packed_bytes(self.params)
+
+    def scale_bytes(self) -> int:
+        return packing.tree_scale_bytes(self.params)
+
+    def policy_bytes(self) -> float:
+        """What the ILP accounted for: ``MPQPolicy.size_bytes``."""
+        return self.policy.size_bytes(self.qlayers)
+
+    def fp_bytes(self, bytes_per_param: int = 4) -> int:
+        """Unquantized weight bytes of the searched projections."""
+        return sum(q.w_params for q in self.qlayers) * bytes_per_param
+
+    @property
+    def kv_quant(self) -> str:
+        return self._kv_quant
+
+    @property
+    def w_bits_total(self) -> float:
+        """Exact packed weight-storage bits for the roofline's bytes term."""
+        return self.policy_bytes() * 8.0
+
+    # -- engine adapter API -------------------------------------------------
+    def _forward(self, params, x, img_x, mode, states, pos, prefill_cap):
+        new_states = {"sites": {}}
+        for site in self.sites:
+            key = _site_key(site.gidx)
+            st = None if states is None else states["sites"].get(key)
+            x, st, _ = lm.apply_layer(
+                site.kind, x, params["sites"][key], self._site_bits[key],
+                self.cfg, self.ctx, self.axes, mode=mode, state=st, pos=pos,
+                img_x=img_x, prefill_cap=prefill_cap)
+            new_states["sites"][key] = st
+        return x, new_states
+
+    def prefill(self, params, inputs, *, prefill_cap, true_len=None):
+        x, img_x = lm.embed_inputs(params, self.cfg, inputs, self.ctx,
+                                   self.axes)
+        x, states = self._forward(params, x, img_x, "prefill", None, None,
+                                  prefill_cap)
+        return lm.finish_prefill(x, states, params, self.cfg, self.ctx,
+                                 self.axes, true_len)
+
+    def decode(self, params, tok, pos, states):
+        x, _ = lm.embed_inputs(params, self.cfg, {"tokens": tok}, self.ctx,
+                               self.axes)
+        x, new_states = self._forward(params, x, None, "decode", states, pos,
+                                      None)
+        logits = lm.lm_head(x, params, self.cfg, self.ctx, self.axes)
+        return logits[:, 0], new_states
+
+    def init_state(self, batch, capacity, dtype, per_slot=True):
+        kv = "int8" if self.ctx.kv_quant == "int8" else "none"
+        return {"sites": {
+            _site_key(s.gidx): lm.init_site_state(
+                self.cfg, s.kind, batch, capacity, dtype=dtype,
+                per_slot=per_slot, kv_quant=kv)
+            for s in self.sites}}
+
+    def state_per_slot(self, row):
+        return lm.decode_state_per_slot(row)
+
+    # -- persistence --------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, directory: str, cfg: ModelConfig, *,
+                        step: Optional[int] = None,
+                        ctx: Optional[QuantContext] = None,
+                        axes: MeshAxes = NO_AXES,
+                        **kwargs) -> "QuantizedSession":
+        """Restore a ``checkpoint.save_serving_bundle`` artifact (params +
+        policy) and pack it for serving."""
+        from repro import checkpoint as ckpt
+
+        template = lm.init_params(jax.random.PRNGKey(0), cfg)
+        params, policy, _ = ckpt.load_serving_bundle(directory, template,
+                                                     step=step)
+        return cls(cfg, params, policy, ctx, axes, **kwargs)
+
+
+def _merge(dst: dict, src: dict) -> dict:
+    for k, v in src.items():
+        if isinstance(v, dict) and isinstance(dst.get(k), dict):
+            _merge(dst[k], v)
+        else:
+            dst[k] = v
+    return dst
+
+
+def summarize(session: QuantizedSession) -> Dict[str, Any]:
+    """HBM accounting for logs / the quant-serve benchmark."""
+    packed = session.packed_bytes()
+    target = session.policy_bytes()
+    return {
+        "mode": session.mode,
+        "packed_bytes": int(packed),
+        "scale_bytes": int(session.scale_bytes()),
+        "policy_bytes": float(target),
+        "fp32_bytes": int(session.fp_bytes()),
+        "packed_vs_policy": packed / target if target else float("nan"),
+        "compression_vs_fp32": session.fp_bytes() / packed if packed
+        else float("nan"),
+        "avg_bits": session.policy.avg_bits(),
+        "kv_quant": session.kv_quant,
+    }
