@@ -53,12 +53,27 @@ GATED_QUANT = {
     "prefill_compiles": +1,
     "packed_vs_policy": +1,
     "packed_vs_fp32": +1,
+    # the --mesh host8 sharded serving path (2-way dp x 4-way tp): same
+    # scheduler counters plus the per-chip packed-bytes ratio, so the
+    # tensor-parallel path is regression-gated alongside the single-device
+    # one
+    "sharded_decode_steps": +1,
+    "sharded_tokens_generated": -1,
+    "sharded_prefill_compiles": +1,
+    "sharded_per_shard_vs_policy": +1,
 }
 INFO_QUANT = (
     "packed_tok_per_s",
     "reference_tok_per_s",
     "hbm_bytes_saved_per_step",
+    "sharded_per_shard_bytes",
 )
+
+# boolean identity flags checked per profile (False or missing = failure)
+IDENTITY_FLAGS = {
+    "serve": ("token_identical",),
+    "quant": ("token_identical", "sharded_token_identical"),
+}
 
 PROFILES = {
     "serve": (GATED, INFO, "the fixed-batch path"),
@@ -88,10 +103,9 @@ def main(argv=None):
     gated, info_metrics, reference = PROFILES[args.profile]
 
     failures = []
-    if not cur.get("token_identical", False):
-        failures.append(
-            f"token_identical is false: engine diverged from {reference}"
-        )
+    for flag in IDENTITY_FLAGS[args.profile]:
+        if not cur.get(flag, False):
+            failures.append(f"{flag} is false: engine diverged from {reference}")
     for metric, worse_sign in gated.items():
         b, c = base.get(metric), cur.get(metric)
         if b is None or c is None:

@@ -13,7 +13,13 @@ staggered request set, then writes ``benchmarks/out/BENCH_quant_serve.json``:
   (``dist.roofline.decode_step_cost``) for the fp16/bf16-KV baseline vs
   the packed+int8-KV runtime — the arithmetic-intensity shift quantized
   serving buys;
-* wall-clock throughput for the artifact trail (never gated).
+* wall-clock throughput for the artifact trail (never gated);
+* the SHARDED serving path (``--mesh host8``-equivalent: 2-way dp x 4-way
+  tp over 8 forced host devices, run in a subprocess so this process
+  keeps 1 device): scheduler counters + token identity vs the
+  single-device session + measured per-shard-vs-budget ratio, all gated,
+  plus the tp roofline's per-shard HBM and all-reduce wire bytes so the
+  bench table shows the tp-scaling story.
 
 Usage: PYTHONPATH=src python -m benchmarks.run --only quant_serve_bench
 """
@@ -21,6 +27,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -53,16 +61,51 @@ def _mixed_policy(cfg):
 
 
 def _step_counters(cfg, slots, cache_len, *, kv_bits, w_bits_total=None,
-                   avg_weight_bits=32.0):
+                   avg_weight_bits=32.0, tp_size=1):
     cost = roofline.decode_step_cost(
         cfg, slots, cache_tokens=cache_len, kv_bits=kv_bits,
-        w_bits_total=w_bits_total, avg_weight_bits=avg_weight_bits)
+        w_bits_total=w_bits_total, avg_weight_bits=avg_weight_bits,
+        tp_size=tp_size)
     chip = roofline.DEFAULT_CHIP
     flops = cost["compute_s"] * chip.peak_flops
     hbm = cost["memory_s"] * chip.hbm_bytes_s
     return {"step_flops": flops, "step_hbm_bytes": hbm,
             "flops_per_byte": flops / hbm if hbm else 0.0,
-            "step_s_model": cost["step_s"], "dominant": cost["dominant"]}
+            "step_s_model": cost["step_s"], "dominant": cost["dominant"],
+            # per-shard HBM + tp all-reduce wire bytes (tp-scaling story)
+            "per_shard_hbm_bytes": cost["hbm_bytes"],
+            "allreduce_wire_bytes": cost["wire_bytes"]}
+
+
+# The --mesh host8 serving path, measured in a subprocess: the forced
+# 8-device host platform must be set before jax initializes, and this
+# process keeps its single device for the main bench. The harness itself
+# is shared with tests/test_multidevice.py (repro.runtime.sharded_smoke).
+_SHARDED_SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.runtime import sharded_smoke
+
+preset = json.loads(os.environ["QS_BENCH_PRESET"])
+ref, sharded = sharded_smoke.run_sharded_vs_single(preset)
+print("QS_SHARDED " + json.dumps(sharded_smoke.sharded_counters(ref, sharded)))
+"""
+
+
+def _sharded_counters(preset) -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    tail = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src + (os.pathsep + tail if tail else "")
+    env["QS_BENCH_PRESET"] = json.dumps(preset)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    for line in out.stdout.splitlines():
+        if line.startswith("QS_SHARDED "):
+            return json.loads(line[len("QS_SHARDED "):])
+    raise RuntimeError(
+        f"sharded bench subprocess produced no counters:\n"
+        f"{out.stdout[-1000:]}\n{out.stderr[-2000:]}")
 
 
 def run(fast: bool = True):
@@ -109,7 +152,14 @@ def run(fast: bool = True):
                              avg_weight_bits=16.0),
         "quantized": _step_counters(cfg, p["slots"], cache_len, kv_bits=8.0,
                                     w_bits_total=w_bits_total),
+        # per-shard view of the same quantized step under 4-way tp: HBM
+        # per chip and the megatron all-reduce bytes the tp split pays
+        "quantized_tp4": _step_counters(cfg, p["slots"], cache_len,
+                                        kv_bits=8.0,
+                                        w_bits_total=w_bits_total,
+                                        tp_size=4),
     }
+    sharded = _sharded_counters(p)
     pstats = results["packed"]["stats"]
     out = {
         "preset": p,
@@ -137,6 +187,7 @@ def run(fast: bool = True):
         "reference_tok_per_s":
             results["reference"]["stats"]["decode_tokens_per_s"],
     }
+    out.update(sharded)
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(BENCH_PATH, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
@@ -147,10 +198,20 @@ def run(fast: bool = True):
           f"(reference {out['reference_prefill_compiles']})")
     print(f"  roofline step bytes: fp {counters['fp']['step_hbm_bytes']:.2e}"
           f" -> quantized {counters['quantized']['step_hbm_bytes']:.2e}")
+    tp4 = counters["quantized_tp4"]
+    print(f"  tp=4 per-shard HBM {tp4['per_shard_hbm_bytes']:.2e} B/step | "
+          f"all-reduce {tp4['allreduce_wire_bytes']:.2e} B/step | sharded "
+          f"serve: tokens_identical={sharded['sharded_token_identical']} "
+          f"per-shard x{sharded['sharded_per_shard_vs_policy']:.3f} of "
+          f"budget on tp={sharded['sharded_tp_size']}")
     print(f"  -> {BENCH_PATH}")
     assert identical, "packed runtime diverged from the fake-quant reference"
     assert abs(info["packed_vs_policy"] - 1.0) <= 0.05, \
         "packed HBM bytes off the policy accounting by more than 5%"
+    assert sharded["sharded_token_identical"], \
+        "sharded session diverged from the single-device session"
+    assert sharded["sharded_per_shard_vs_policy"] <= 1.05, \
+        "per-shard packed bytes exceed policy.size_bytes/tp beyond padding"
     return out
 
 

@@ -171,10 +171,7 @@ def save_serving_bundle(directory: str, step: int, params,
     mgr.save(step, params, meta=meta, blocking=True)
 
 
-def load_serving_bundle(directory: str, template, *, step: Optional[int] = None,
-                        sharding_fn: Optional[Callable[[str], Any]] = None):
-    """Restore ``(params, policy, meta)`` saved by ``save_serving_bundle``.
-    ``step=None`` loads the latest step."""
+def _bundle_policy_meta(directory: str, step: Optional[int]):
     from repro.core.policy import MPQPolicy
 
     mgr = CheckpointManager(directory)
@@ -187,8 +184,28 @@ def load_serving_bundle(directory: str, template, *, step: Optional[int] = None,
         raise KeyError(
             f"checkpoint step {step} in {directory!r} has no 'mpq_policy' "
             "meta entry — not a serving bundle")
+    return mgr, step, MPQPolicy.from_json(meta["mpq_policy"]), meta
+
+
+def peek_serving_policy(directory: str, *, step: Optional[int] = None):
+    """Load just the ``MPQPolicy`` from a serving bundle (meta.json only,
+    no array I/O) — lets deployment code validate a bundle against its
+    model config *before* paying, or crashing inside, the param restore."""
+    return _bundle_policy_meta(directory, step)[2]
+
+
+def load_serving_bundle(directory: str, template, *, step: Optional[int] = None,
+                        sharding_fn: Optional[Callable[[str], Any]] = None,
+                        validate: Optional[Callable[[Any], Any]] = None):
+    """Restore ``(params, policy, meta)`` saved by ``save_serving_bundle``.
+    ``step=None`` loads the latest step. ``validate(policy)`` runs BEFORE
+    the array restore, so a stale/foreign bundle fails on the policy
+    message path instead of a cryptic missing-array error (and the meta is
+    read only once — no separate ``peek_serving_policy`` round trip)."""
+    mgr, step, policy, meta = _bundle_policy_meta(directory, step)
+    if validate is not None:
+        validate(policy)
     params = mgr.restore(step, template, sharding_fn=sharding_fn)
-    policy = MPQPolicy.from_json(meta["mpq_policy"])
     return params, policy, meta
 
 

@@ -50,8 +50,14 @@ class MPQPolicy:
     def bitops(self, qlayers: Sequence[QLayer], n_tokens: int) -> float:
         return qspec.total_bitops(qlayers, self.w_bits, self.a_bits, n_tokens)
 
-    def size_bytes(self, qlayers: Sequence[QLayer]) -> float:
-        return qspec.total_size_bytes(qlayers, self.w_bits)
+    def size_bytes(self, qlayers: Sequence[QLayer],
+                   per_shard: int = 1) -> float:
+        """Weight-storage bytes of this policy; ``per_shard=tp`` states the
+        same accounting per tensor-parallel shard, so an ILP memory budget
+        (or the serve smoke's per-chip gate) can be phrased against one
+        device's HBM instead of the replicated total."""
+        total = qspec.total_size_bytes(qlayers, self.w_bits)
+        return total / max(int(per_shard), 1)
 
     def avg_bits(self) -> Tuple[float, float]:
         return (float(np.mean(list(self.w_bits.values()))),

@@ -69,11 +69,50 @@ class MeshAxes:
         return P(*(self.resolve(n) for n in names))
 
     def shard(self, x: jax.Array, *names: Optional[str]) -> jax.Array:
-        """Constrain ``x``'s sharding; identity when no mesh is bound."""
+        """Constrain ``x``'s sharding; identity when no mesh is bound.
+
+        Per-dim divisibility guard: a dim that doesn't divide its mesh
+        axes falls back to replication for that dim only. Training shapes
+        always divide (make_axes_for checks the arch dims), but serving
+        runs the same layer code on shapes the arch rules never saw —
+        batch-1 prefill under a data axis, single-token decode under
+        sequence parallelism — and an indivisible constraint is an XLA
+        error, not a fallback."""
         if not self.enabled:
             return x
+        sizes = {k: int(v) for k, v in dict(self.mesh.shape).items()}
+        entries = []
+        for dim, name in zip(x.shape, names):
+            ax = self.resolve(name)
+            if ax is not None:
+                n = 1
+                for a in ax:
+                    n *= sizes[a]
+                if dim % n:
+                    ax = None
+            entries.append(ax)
         return jax.lax.with_sharding_constraint(
-            x, NamedSharding(self.mesh, self.spec(*names)))
+            x, NamedSharding(self.mesh, P(*entries)))
+
+
+def dp_only(axes: MeshAxes) -> MeshAxes:
+    """Demote every model-parallel logical axis, keeping the mesh and the
+    data axes. This is the compute layout the off-TPU serving paths use:
+    jax 0.4.37's CPU SPMD partitioner is not trustworthy with model-axis
+    sharded intermediates (fp contraction splits reassociate — which
+    quantization grids amplify into token flips — and sub-byte
+    unpack/rope chains on multi-dim-tiled values miscompile outright, see
+    runtime/dispatch.py), while batch/slot partitioning over ``dp`` is
+    the well-trodden path. The full megatron split stays for TPU kernel
+    routes.
+
+    ``tp_size`` resets to 1 with the axes it describes — a demoted
+    MeshAxes reports no tensor parallelism (callers wanting the original
+    degree must read it before demoting)."""
+    if not axes.enabled:
+        return axes
+    return dataclasses.replace(axes, sp=(), tp=(), th=(), tv=(), ep=(),
+                               mtp=(), tp_size=1)
 
 
 # Single-device default: every logical axis resolves to nothing and

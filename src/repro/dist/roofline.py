@@ -131,7 +131,10 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
     dominant = max(terms, key=terms.get)
     return {"compute_s": compute_s, "memory_s": memory_s,
             "collective_s": collective_s, "step_s": max(terms.values()),
-            "dominant": dominant}
+            "dominant": dominant,
+            # raw byte counters for the serving benches: per-shard HBM
+            # traffic of one decode step and the tp all-reduce wire bytes
+            "hbm_bytes": w_bytes + kv_bytes, "wire_bytes": wire}
 
 
 def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,

@@ -24,7 +24,7 @@ asserts this for every arch).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import numpy as np
@@ -106,12 +106,13 @@ def param_spec_fn(cfg: ModelConfig,
     leaves named "w" are projection weights; every other leaf (scale
     banks, norms, gates, mixing tables) replicates.
 
-    Packed serving-time weights (``runtime.packing.PackedLinear`` — leaf
-    names "codes"/"scale"/"s_a" under the projection key) fall through to
-    replication by the same rule: sub-byte codes are layout-packed along
-    the contraction dim, so tensor-parallel sharding of packed storage
-    needs per-shard packing (a named runtime follow-up, ROADMAP). The
-    int8 KV cache needs no rule here — ``decode_state_specs`` shards its
+    Packed serving-time weights (``runtime.packing.PackedLinear``) do NOT
+    route through this fn directly — ``packed_specs`` maps each packed
+    leaf's *original* projection rule (looked up here under the synthetic
+    "/w" name) onto its packed code/scale layout, and
+    ``projection_shard_fn`` feeds the same rule to shard-aware packing so
+    the sharded codes split on per-shard byte boundaries. The int8 KV
+    cache needs no rule here — ``decode_state_specs`` shards its
     code/scale slot axis like any other decode-state leaf.
     """
     tps = axes.tp_size
@@ -165,6 +166,103 @@ def param_spec_fn(cfg: ModelConfig,
         return rep
 
     return fn
+
+
+def _spec_shard_axes(spec: P) -> Tuple[Optional[int], Axes]:
+    """First sharded dim of a weight spec -> (dim, mesh axes); (None, ())
+    when fully replicated. Projection rules shard at most one dim."""
+    for d, e in enumerate(tuple(spec)):
+        if e is not None:
+            return d, (e if isinstance(e, tuple) else (e,))
+    return None, ()
+
+
+def _axes_size(mesh, ax: Axes) -> int:
+    sizes = _axis_sizes(mesh)
+    return int(np.prod([sizes[a] for a in ax])) if ax else 1
+
+
+def projection_shard_fn(cfg: ModelConfig, axes: MeshAxes):
+    """Returns ``fn(name, w_shape) -> (shard_dim, shard_count)`` — the
+    tensor-parallel split of one projection weight under ``axes``, in the
+    form ``runtime.packing.pack_linear(shard_dim=, shard_count=)`` takes.
+    ``name`` is the '/'-joined path of the weight leaf (ending "/w"), so
+    the packed layout always follows the same megatron rule the fake-quant
+    param tree would shard under."""
+    fn = param_spec_fn(cfg, axes)
+
+    def info(name: str, shape: Tuple[int, ...]):
+        if not axes.enabled:
+            return None, 1
+        d, ax = _spec_shard_axes(fn(name, shape))
+        if d is None:
+            return None, 1
+        return d, _axes_size(axes.mesh, ax)
+
+    return info
+
+
+def packed_specs(cfg: ModelConfig, params, axes: MeshAxes):
+    """PartitionSpec tree for a packed serving param tree
+    (``runtime.session.QuantizedSession.params``).
+
+    Every ``PackedLinear`` leaf expands to a spec node of the same pytree
+    structure (codes/scale/s_a children carry PartitionSpecs; the static
+    bit metadata stays aux data, outside the spec tree) built from the
+    *original* projection's partition rule:
+
+    * ``codes`` shard along the packed counterpart of the weight's
+      tensor-parallel dim — the same dim for the row layouts, axis 0 of
+      the flat stream for ``bitstream``. A leaf is only sharded when it
+      was packed per-shard for this mesh degree (or its layout is
+      byte-per-code / packed off the shard dim, where plain packing is
+      already per-shard exact); anything else replicates rather than
+      splitting a byte mid-shard.
+    * ``scale`` follows the out-dim: sharded for column-parallel layers
+      (per-channel ``(out,)``) and expert-parallel stacks (``(E, 1, 1)``),
+      replicated for row-parallel ones (their per-channel scale spans the
+      unsharded out dim).
+    * ``s_a`` replicates except per-expert ``(E,)`` banks under expert
+      parallelism.
+
+    Non-packed leaves (embed/head, norms, reference-mode fake-quant
+    dicts) follow ``param_spec_fn`` unchanged.
+    """
+    import dataclasses as _dc
+
+    from repro.runtime.packing import PackedLinear
+
+    fn = param_spec_fn(cfg, axes)
+
+    def one(path, leaf):
+        name = _path_name(path)
+        if not isinstance(leaf, PackedLinear):
+            return fn(name, tuple(leaf.shape))
+        rank = len(leaf.shape)
+        d, ax = _spec_shard_axes(fn(name + "/w", leaf.shape))
+        n = _axes_size(axes.mesh, ax) if ax else 1
+        codes = _replicate(leaf.codes.ndim)
+        scale = _replicate(leaf.scale.ndim)
+        s_a = _replicate(leaf.s_a.ndim)
+        if d is not None and n > 1:
+            per_shard = leaf.shard_dim == d and leaf.shard_count == n
+            if leaf.layout == "bitstream":
+                if per_shard:
+                    codes = P(ax)
+            elif per_shard or leaf.codes.shape[d] % n == 0:
+                codes = _shard_dim(leaf.codes.ndim, d, ax)
+            if (leaf.scale.ndim == 1 and d == rank - 1
+                    and leaf.scale.shape[0] % n == 0):
+                scale = P(ax)                       # column-parallel (out,)
+            elif (leaf.scale.ndim == rank and d == 0
+                    and leaf.scale.shape[0] % n == 0):
+                scale = _shard_dim(rank, 0, ax)     # expert stack (E, 1, 1)
+            if leaf.s_a.ndim == 1 and d == 0 and leaf.s_a.shape[0] % n == 0:
+                s_a = P(ax)                         # per-expert (E,) bank
+        return _dc.replace(leaf, codes=codes, scale=scale, s_a=s_a)
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, PackedLinear))
 
 
 def _path_name(path) -> str:

@@ -37,6 +37,17 @@ per-head write-time scales (``repro.runtime.kv_cache``), halving decode
 HBM traffic per cache element; the roofline-driven prefill budget sees the
 quantized bytes through ``decode_step_cost(kv_bits=8)``.
 
+Mesh execution: when ``axes`` carries a real mesh (``dist.sharding
+.make_axes_for``), the engine resolves partition specs once at build —
+params through the adapter's ``param_specs()`` hook (``packed_specs`` for
+a quantized session: sub-byte ``codes`` shard over ``tp`` instead of
+replicating) falling back to ``dist.sharding.param_specs``, and the
+per-slot decode state (fp or int8 KV) through ``decode_state_specs`` —
+``device_put``s both onto the mesh, and jits prefill/insert/decode/evict
+with explicit ``in_shardings``/``out_shardings``. Under ``NO_AXES`` (or a
+trivial host ``(1,)`` mesh) the same code path degenerates to the
+single-device behavior bit-exactly.
+
 Inactive slots still occupy compute (the decode batch is static — standard
 for continuous-batching engines); the win is scheduling, measured by
 ``EngineStats.decode_steps`` / ``slot_steps``.
@@ -90,6 +101,7 @@ class EngineStats:
     prefill_calls: int = 0
     prefill_tokens: int = 0
     prefill_compiles: int = 0  # distinct prompt shapes fed to the jit cache
+    act_quant_reused: int = 0  # activation quantize ops elided per compile
     admitted: int = 0
     completed: int = 0
     tokens_generated: int = 0
@@ -222,14 +234,27 @@ class DecodeEngine:
         self.prefill_chunk = int(chunk)
         self.scheduler = scheduler or Scheduler(self.ecfg.policy, self.prefill_chunk)
         self.stats = EngineStats()
+        # the adapter's reuse counter is lifetime-cumulative across every
+        # trace it ever ran; stats report the delta since this engine's
+        # build (reset() re-snapshots), i.e. ops elided by THIS engine's
+        # compiles
+        self._act_reuse_base = getattr(adapter, "act_quant_reused", 0)
         self.slots: List[Optional[_Slot]] = [None] * self.ecfg.slots
         self.completions: Dict[int, Completion] = {}
-        self.state = adapter.init_state(
-            self.ecfg.slots,
-            self.ecfg.cache_len,
-            dtype=self.ecfg.state_dtype,
-            per_slot=True,
-        )
+        self.axes = axes
+        self._mesh = axes.mesh if axes.enabled else None
+        self._param_shardings = None
+        self._state_shardings = None
+        if self._mesh is not None:
+            from repro.dist import sharding as shd
+
+            spec_fn = getattr(adapter, "param_specs", None)
+            pspecs = spec_fn() if spec_fn else shd.param_specs(cfg, self.params, axes)
+            self._param_shardings = shd.named(self._mesh, pspecs)
+            # named once at build: packed codes/scales land on their tp
+            # shards, everything else on its megatron home, before any jit
+            self.params = jax.device_put(self.params, self._param_shardings)
+        self.state = self._fresh_state()
 
         # prompt-length bucketing bounds prefill recompiles, but padded
         # prompt tokens would perturb recurrent state (rwkv/rec scans run
@@ -287,10 +312,58 @@ class DecodeEngine:
                 one, state, is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES)
             )
 
-        self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode, donate_argnums=(3,))
-        self._insert = jax.jit(insert, donate_argnums=(0,))
-        self._evict = jax.jit(evict, donate_argnums=(0,))
+        if self._mesh is None:
+            self._prefill = jax.jit(prefill)
+            self._decode = jax.jit(decode, donate_argnums=(3,))
+            self._insert = jax.jit(insert, donate_argnums=(0,))
+            self._evict = jax.jit(evict, donate_argnums=(0,))
+        else:
+            # explicit shardings end-to-end: params enter on their specs,
+            # the decode state's slot axis stays pinned over dp across the
+            # donate chain, and decode logits come back replicated for the
+            # host-side argmax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            ps, ss = self._param_shardings, self._state_shardings
+            rep = NamedSharding(self._mesh, P())
+            pre_in = (ps, None, None) if self._bucket else (ps, None)
+            self._prefill = jax.jit(prefill, in_shardings=pre_in)
+            self._decode = jax.jit(
+                decode,
+                donate_argnums=(3,),
+                in_shardings=(ps, None, None, ss),
+                out_shardings=(rep, ss),
+            )
+            self._insert = jax.jit(
+                insert,
+                donate_argnums=(0,),
+                in_shardings=(ss, None, None),
+                out_shardings=ss,
+            )
+            self._evict = jax.jit(
+                evict,
+                donate_argnums=(0,),
+                in_shardings=(ss, None),
+                out_shardings=ss,
+            )
+
+    def _fresh_state(self):
+        """Allocate the per-slot decode state and, under a mesh, place it
+        on its resolved shardings (computed once, then reused by reset)."""
+        state = self.adapter.init_state(
+            self.ecfg.slots,
+            self.ecfg.cache_len,
+            dtype=self.ecfg.state_dtype,
+            per_slot=True,
+        )
+        if self._mesh is not None:
+            if self._state_shardings is None:
+                from repro.dist import sharding as shd
+
+                specs = shd.decode_state_specs(self.cfg, state, self.axes)
+                self._state_shardings = shd.named(self._mesh, specs)
+            state = jax.device_put(state, self._state_shardings)
+        return state
 
     def reset(self, policy: Optional[str] = None) -> None:
         """Clear queue, slots, stats, and decode state — but keep the jitted
@@ -302,12 +375,8 @@ class DecodeEngine:
         self.stats = EngineStats()
         self.slots = [None] * self.ecfg.slots
         self.completions = {}
-        self.state = self.adapter.init_state(
-            self.ecfg.slots,
-            self.ecfg.cache_len,
-            dtype=self.ecfg.state_dtype,
-            per_slot=True,
-        )
+        self._act_reuse_base = getattr(self.adapter, "act_quant_reused", 0)
+        self.state = self._fresh_state()
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -389,6 +458,9 @@ class DecodeEngine:
             logits, row = self._prefill(self.params, inputs)
         self._prefill_shapes.add(int(toks.shape[-1]))
         self.stats.prefill_compiles = len(self._prefill_shapes)
+        self.stats.act_quant_reused = (
+            getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
+        )
         row = self.adapter.state_per_slot(row)
         self.state = self._insert(self.state, row, jnp.asarray(idx, jnp.int32))
         first = int(jax.block_until_ready(jnp.argmax(logits[0], -1)))
@@ -417,6 +489,9 @@ class DecodeEngine:
         nxt = np.asarray(jax.block_until_ready(jnp.argmax(logits, -1)))
         self.stats.t_decode_s += time.time() - t0
         self.stats.decode_steps += 1
+        self.stats.act_quant_reused = (
+            getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
+        )
         self.stats.slot_steps += len(live)
         self.stats.padded_slot_steps += len(self._occupied())
         for i in live:

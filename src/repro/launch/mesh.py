@@ -30,4 +30,9 @@ def make_mesh_by_name(name: str):
         return make_production_mesh(multi_pod=True), "2x16x16"
     if name in ("host", "cpu", "1"):
         return jax.make_mesh((1,), ("data",)), "1"
+    if name in ("host8", "2x4"):
+        # 8 forced host devices (xla_force_host_platform_device_count=8):
+        # 2-way data (engine slot axis) x 4-way megatron tensor parallel —
+        # the serve-smoke / multi-device test topology
+        return jax.make_mesh((2, 4), ("data", "model")), "2x4"
     raise ValueError(f"unknown mesh {name!r}")

@@ -17,10 +17,21 @@ tokens must be identical to a reference engine running the fake-quant
 training graph, and measured packed HBM bytes must land within 5% of
 ``MPQPolicy.size_bytes``.
 
+``--mesh <name>`` serves under a real device mesh (``host`` = trivial
+(1,); ``host8`` = 2-way data x 4-way tensor parallel over 8 forced host
+devices): packed codes/scales shard per-tensor-parallel-shard, the int8
+KV slot axis shards over data, and the engine jits with explicit
+in/out_shardings. The smoke then adds a per-chip gate: per-shard packed
+bytes must not exceed ``policy.size_bytes / tp`` beyond padding, while
+greedy tokens stay identical to the single-device reference.
+
 Examples:
   python -m repro.launch.serve --smoke
   python -m repro.launch.serve --write-demo-policy searched.json
   python -m repro.launch.serve --smoke --policy searched.json
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.serve --smoke --policy searched.json \
+      --mesh host8
   python -m repro.launch.serve --arch limpq-demo --requests 8 --slots 4 \
       --prompt-len 32 --gen 16 --stagger --compare
 """
@@ -61,12 +72,12 @@ def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0):
 
 
 def run_engine(params, cfg, bits, ctx, reqs, *, schedule, slots, cache_len,
-               eng=None):
+               eng=None, axes=NO_AXES):
     """Run one request set; pass ``eng`` to reuse its compiled functions
     (reset under the new schedule instead of paying a full re-jit)."""
     if eng is None:
         ecfg = EngineConfig(slots=slots, cache_len=cache_len, policy=schedule)
-        eng = DecodeEngine(params, cfg, bits, ctx, NO_AXES, ecfg)
+        eng = DecodeEngine(params, cfg, bits, ctx, axes, ecfg)
     else:
         eng.reset(schedule)
     eng.submit_all(reqs)
@@ -111,21 +122,42 @@ def write_demo_policy(path, arch="limpq-demo", smoke=True):
     return policy
 
 
-def serve_quantized(args, cfg, params, ctx, reqs, cache_len):
+def resolve_axes(args, cfg):
+    """``--mesh`` -> (MeshAxes, label). NO_AXES when no mesh requested.
+    ``shard_seq=False``: serving smokes gate exact token identity against
+    the single-device path."""
+    if not args.mesh:
+        return NO_AXES, None
+    from repro.dist import sharding
+    from repro.launch.mesh import make_mesh_by_name
+
+    try:
+        mesh, label = make_mesh_by_name(args.mesh)
+    except ValueError as e:
+        raise SystemExit(
+            f"--mesh {args.mesh}: {e}. A multi-device host mesh needs "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<n> set "
+            "before jax initializes.")
+    return sharding.make_axes_for(cfg, mesh, shard_seq=False), label
+
+
+def serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes=NO_AXES):
     """The ``--policy`` path: pack a searched policy into a
     ``QuantizedSession`` and serve it through the engine. With --smoke,
     gate token identity vs the fake-quant reference graph and packed HBM
-    bytes vs the policy's accounting."""
+    bytes vs the policy's accounting — plus, under a tensor-parallel
+    ``--mesh``, per-shard packed bytes vs the per-chip budget
+    ``policy.size_bytes / tp``."""
     from repro.runtime.session import QuantizedSession, summarize
 
     policy = MPQPolicy.load(args.policy)
     kv = "none" if args.kv == "fp" else "int8"
-    sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+    sess = QuantizedSession(cfg, params, policy, ctx, axes, mode="packed",
                             kv_quant=kv)
     ecfg = EngineConfig(slots=args.slots, cache_len=cache_len,
                         policy=args.schedule, kv_quant=kv,
                         bucket_prompts=not args.no_bucket)
-    eng = DecodeEngine(sess.params, cfg, None, ctx, NO_AXES, ecfg,
+    eng = DecodeEngine(sess.params, cfg, None, ctx, axes, ecfg,
                        adapter=sess)
     eng.submit_all(reqs)
     completions = eng.run()
@@ -136,7 +168,42 @@ def serve_quantized(args, cfg, params, ctx, reqs, cache_len):
           f"{s['policy_bytes']:.0f} B (x{s['packed_vs_policy']:.3f}) | "
           f"{s['compression_vs_fp32']:.2f}x smaller than fp32 | "
           f"kv={s['kv_quant']} | prefill shapes compiled: "
-          f"{eng.stats.prefill_compiles}")
+          f"{eng.stats.prefill_compiles} | act quantizes reused: "
+          f"{eng.stats.act_quant_reused}")
+    if axes.enabled and axes.tp_size > 1:
+        ideal = policy.size_bytes(sess.qlayers, per_shard=axes.tp_size)
+        # the gate budget follows the session's actual shard plan: a
+        # projection the partition rules legitimately replicate (heads not
+        # dividing the axis, etc.) counts in full per chip, so only
+        # packing failures — codes replicating where the plan shards —
+        # can trip it
+        budget = sess.per_shard_policy_bytes()
+        print(f"per-shard packed bytes: {s['per_shard_bytes']} B on each of "
+              f"{axes.tp_size} tp shards vs per-chip plan budget "
+              f"{budget:.0f} B (all-shardable ideal: size_bytes/tp = "
+              f"{ideal:.0f} B)")
+        if args.smoke and s["per_shard_bytes"] > budget * 1.05:
+            raise SystemExit(
+                f"per-shard packed bytes {s['per_shard_bytes']} exceed the "
+                f"per-chip plan budget {budget:.0f} by more than padding "
+                "(5%) — codes are replicating where the shard plan says "
+                "they shard")
+        if args.smoke:
+            # device truth, not pack-time metadata: every codes leaf the
+            # plan shards must actually BE sharded on the engine's placed
+            # params (catches spec-tree / placement regressions that the
+            # byte accounting above cannot see)
+            from repro.runtime import packing
+            bad = [pl.shape for pl in packing.packed_leaves(eng.params)
+                   if pl.shard_count > 1
+                   and pl.codes.sharding.is_fully_replicated]
+            if bad:
+                raise SystemExit(
+                    f"codes replicated on-device for plan-sharded "
+                    f"projections {bad[:3]} (+{max(len(bad) - 3, 0)} more)")
+            print(f"on-device shardings verified: no plan-sharded codes "
+                  f"leaf replicates ({len(packing.packed_leaves(eng.params))}"
+                  " packed leaves)")
 
     if args.smoke or args.compare:
         # reference: the fake-quant training graph (scanned body) through
@@ -186,6 +253,10 @@ def main(argv=None):
                          "quantized runtime (repro.runtime.session)")
     ap.add_argument("--kv", default="int8", choices=("int8", "fp"),
                     help="KV-cache storage for the --policy runtime")
+    ap.add_argument("--mesh", default=None,
+                    help="serve under a device mesh: host ((1,)) | host8 "
+                         "(2-way data x 4-way tensor parallel; needs "
+                         "xla_force_host_platform_device_count=8)")
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable prompt-length bucketing (--policy path)")
     ap.add_argument("--write-demo-policy", default=None, metavar="PATH",
@@ -225,9 +296,24 @@ def main(argv=None):
                           arrive_every=args.arrive_every)
     cache_len = args.cache_len or (args.prompt_len + args.gen)
 
+    axes, mesh_label = resolve_axes(args, cfg)
+    if mesh_label:
+        print(f"mesh {mesh_label}: dp={axes.dp_size} tp={axes.tp_size}")
+
     if args.policy:
-        serve_quantized(args, cfg, params, ctx, reqs, cache_len)
+        serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes)
         return
+
+    if axes.enabled and jax.default_backend() != "tpu":
+        # fake-quant fp serving has no packed-codes gather, so off-TPU it
+        # must not carry model-sharded intermediates either (the packed
+        # session demotes internally — see dist.axes.dp_only)
+        from repro.dist.axes import dp_only
+        had_tp = axes.tp_size > 1
+        axes = dp_only(axes)
+        if had_tp:
+            print("note: off-TPU fp serving keeps only data-parallel "
+                  "compute; model-parallel axes demoted")
 
     ql = lm.enumerate_qlayers(cfg)
     policy = MPQPolicy.uniform(ql, args.uniform_bits)
@@ -239,10 +325,10 @@ def main(argv=None):
         # report steady-state throughput (serve_bench does the same)
         eng, _ = run_engine(params, cfg, bits, ctx, reqs,
                             schedule=args.schedule, slots=args.slots,
-                            cache_len=cache_len)
+                            cache_len=cache_len, axes=axes)
     eng, completions = run_engine(params, cfg, bits, ctx, reqs,
                                   schedule=args.schedule, slots=args.slots,
-                                  cache_len=cache_len, eng=eng)
+                                  cache_len=cache_len, eng=eng, axes=axes)
     cont_stats = eng.stats      # reset() below replaces, not mutates, this
     print_stats(args.schedule, eng)
     r0 = completions[0]

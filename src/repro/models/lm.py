@@ -448,6 +448,8 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
             v = qeinsum("bnd,de->bne", hk, p["wv"], _bget(bits, "wv"), ctx)
             k = k.reshape(B, -1, KV, hd)
             v = v.reshape(B, -1, KV, hd)
+            k = axes.shard(k, "dp", None, "th", None)
+            v = axes.shard(v, "dp", None, "th", None)
             if cfg.qk_norm:
                 k = _qk_rms(k, p["k_norm"], cfg.norm_eps)
             new_state = (k, v) if mode == "prefill" else None
@@ -459,6 +461,15 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
         v = qeinsum("bsd,de->bse", h, p["wv"], _bget(bits, "wv"), ctx)
         k = k.reshape(B, S, KV, hd)
         v = v.reshape(B, S, KV, hd).astype(ctx.compute_dtype)
+        # pin the post-reshape layout to a per-dim spec: the projection
+        # output arrives sharded on the merged KV*hd dim, and when KV
+        # doesn't divide the axis the reshape leaves a multi-dim tiling
+        # that downstream slice/concat (rope) must not consume — shard by
+        # KV head when it divides, else replicate (megatron keeps KV heads
+        # whole per shard)
+        q = axes.shard(q, "dp", None, "th", None)
+        k = axes.shard(k, "dp", None, "th", None)
+        v = axes.shard(v, "dp", None, "th", None)
         if cfg.qk_norm:
             q = _qk_rms(q, p["q_norm"], cfg.norm_eps)
             k = _qk_rms(k, p["k_norm"], cfg.norm_eps)

@@ -21,6 +21,29 @@ every call site resolves — at trace time — which execution route serves it:
 The Pallas routes are int32-exact per the kernel contract but not bitwise
 equal to an fp einsum, so ``resolve`` only picks them on a TPU backend;
 ``force_impl`` overrides for interpret-mode equivalence tests.
+
+Tensor parallelism (``axes_scope``): column-parallel layers need nothing —
+codes, scale and the matmul all split on the output dim, every channel's
+full-K contraction stays on one shard, and the result is bitwise equal to
+the single-device einsum. Row-parallel layers (``...k,kn->...n`` with K
+sharded, or the transposed ``...e,ed->...d`` orientation) are where the
+megatron eqn splits the *contraction*:
+
+    y = sum_s  x_s @ dequant(codes_s)        (s = shard)
+
+each shard dequantizes its K-slab and computes a partial product, and the
+cross-shard partial-sum reduce happens in fp. That split is
+order-independent — hence still exact — whenever the per-shard partial is
+accumulated in integers (the int8/int4 MXU kernel routes: int32 partials,
+fp only at the final scale), so on the kernel routes the eqn split is the
+execution plan. The fp fallback cannot use it and stay bitwise: fp MACs
+reassociate under the split (measured: ~5e-5 per matmul, which the next
+layer's quantization grid amplifies into full code-step jumps). So in the
+``dequant-fp`` route each shard still dequantizes only its own slab, but
+the slabs (and the activation) are then constrained replicated — SPMD
+all-gathers them and the full-K einsum runs unsplit, reproducing the
+single-device op chain bit-for-bit. Packed HBM storage stays sharded
+either way; only the fp route's wire traffic pays for its exactness.
 """
 from __future__ import annotations
 
@@ -36,6 +59,7 @@ from repro.runtime.packing import PackedLinear
 Array = jax.Array
 
 _FORCE: List[Optional[str]] = [None]
+_AXES: List = [None]
 
 
 @contextlib.contextmanager
@@ -46,6 +70,82 @@ def force_impl(name: Optional[str]):
         yield
     finally:
         _FORCE.pop()
+
+
+@contextlib.contextmanager
+def axes_scope(axes):
+    """Bind the serving session's ``MeshAxes`` for the duration of one
+    traced forward, so the dequant-fp route can pin its row-parallel
+    gather (module docstring) without threading ``axes`` through every
+    layer call site. No-op scope under ``NO_AXES``."""
+    _AXES.append(axes if (axes is not None and axes.enabled) else None)
+    try:
+        yield
+    finally:
+        _AXES.pop()
+
+
+def _w_contracted_dims(eqn: str):
+    """Indices of the weight dims the einsum contracts away."""
+    try:
+        lhs, out = eqn.split("->")
+        xs, ws = lhs.split(",")
+    except ValueError:
+        return frozenset()
+    return frozenset(i for i, c in enumerate(ws) if c in xs and c not in out)
+
+
+# ---------------------------------------------------------------------------
+# activation-code reuse (one quantize per site for wq/wk/wv-style fans)
+# ---------------------------------------------------------------------------
+_SCOPE: List[Optional[dict]] = [None]
+
+
+@contextlib.contextmanager
+def act_reuse_scope():
+    """Memoize quantized activations for the duration of one traced
+    forward pass.
+
+    Projections that consume the *same* hidden state with bit-identical
+    quantization parameters — wq/wk/wv on a site's normed residual, an MoE
+    stack's wi/wg on the gathered tokens — otherwise each quantize that
+    activation again. Inside this scope, ``act_fake_quant``/``act_codes``
+    cache by ``(input identity, PackedLinear.a_group)``: the session
+    assigns matching ``a_group`` tags at pack time only to layers whose
+    (a_bits, a_signed, trained bank scale values) are equal, so a cache
+    hit returns the exact array the miss would have computed and token
+    identity with the per-layer-quantizing reference graph is preserved.
+
+    Yields a dict whose ``"hits"`` counts elided quantize ops. The count
+    is per *trace* (one compile), not per executed step — it measures ops
+    removed from the jitted graph (surfaced as
+    ``EngineStats.act_quant_reused``).
+    """
+    scope = {"cache": {}, "hits": 0}
+    _SCOPE.append(scope)
+    try:
+        yield scope
+    finally:
+        _SCOPE.pop()
+
+
+def _reuse_lookup(x: Array, pl: PackedLinear, tag: str):
+    """(cache_key, hit_or_None). The cached entry keeps a reference to the
+    input array so an id() recycled by the allocator can never alias."""
+    scope = _SCOPE[-1]
+    if scope is None or not pl.a_group:
+        return None, None
+    key = (id(x), pl.a_group, tag)
+    entry = scope["cache"].get(key)
+    if entry is not None and entry[0] is x:
+        scope["hits"] += 1
+        return key, entry[1]
+    return key, None
+
+
+def _reuse_store(key, x: Array, value):
+    if key is not None:
+        _SCOPE[-1]["cache"][key] = (x, value)
 
 
 # ---------------------------------------------------------------------------
@@ -67,18 +167,28 @@ def act_fake_quant(x: Array, pl: PackedLinear, ctx) -> Array:
     bitwise parity."""
     if not (ctx.enabled and ctx.quantize_acts):
         return x
+    key, hit = _reuse_lookup(x, pl, "fake")
+    if hit is not None:
+        return hit
     qmin, qmax = pl.a_range
     g = lsq_grad_scale_factor(x.size, qmax)
-    return fake_quant(x, _act_scale(x, pl), qmin, qmax, grad_scale_factor=g)
+    out = fake_quant(x, _act_scale(x, pl), qmin, qmax, grad_scale_factor=g)
+    _reuse_store(key, x, out)
+    return out
 
 
 def act_codes(x: Array, pl: PackedLinear, ctx):
     """Integer activation codes + scale for the int8 kernel routes
     (per-tensor scale only — kernel-eligible layers are never stacked)."""
+    key, hit = _reuse_lookup(x, pl, "codes")
+    if hit is not None:
+        return hit
     qmin, qmax = pl.a_range
     s = jnp.maximum(pl.s_a.reshape(()), 1e-9)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), qmin, qmax)
-    return q.astype(jnp.int8), s
+    out = (q.astype(jnp.int8), s)
+    _reuse_store(key, x, out)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -100,10 +210,42 @@ def _kernel_form(eqn: str) -> bool:
 # ---------------------------------------------------------------------------
 # implementations
 # ---------------------------------------------------------------------------
+def _replicate(mesh, a: Array) -> Array:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        a, NamedSharding(mesh, P(*([None] * a.ndim))))
+
+
 def _impl_dequant_fp(eqn: str, x: Array, pl: PackedLinear, ctx) -> Array:
     xq = act_fake_quant(x, pl, ctx).astype(ctx.compute_dtype)
-    w = pl.dequant(ctx.compute_dtype)
-    return jnp.einsum(eqn, xq, w)
+    axes = _AXES[-1]
+    if axes is not None and pl.shard_count > 1:
+        # Gather the *packed* codes — the cheapest form on the wire, and
+        # the only per-step tp traffic this route adds — then unpack,
+        # dequant and contract replicated. Row-parallel weights REQUIRE
+        # the gather so the fp full-K contraction does not split (module
+        # docstring); the rest take it too because the sub-byte unpack is
+        # reshape/slice-heavy and a replicated stream keeps the op chain
+        # identical to the single-device graph op for op. HBM storage
+        # between steps stays sharded regardless — this trades wire for
+        # bitwise exactness, which is the fallback's contract; the MXU
+        # kernel routes keep shard-local slabs and the int32-exact
+        # partial-sum split.
+        import dataclasses
+        codes, scale = jax.lax.optimization_barrier(
+            (_replicate(axes.mesh, pl.codes),
+             _replicate(axes.mesh, pl.scale)))
+        pl = dataclasses.replace(pl, codes=codes, scale=scale)
+        if pl.shard_dim in _w_contracted_dims(eqn):
+            xq = _replicate(axes.mesh, xq)
+        # the barriers bracket the unpack chain so the SPMD partitioner
+        # cannot re-fuse it across the gather boundary — left free, the
+        # 0.4.37 CPU partitioner re-tiles the packed-stream reshapes and
+        # produces wrong slabs (only when the chain stays internal to a
+        # larger jit; any materialization hides it)
+        w = jax.lax.optimization_barrier(pl.dequant(ctx.compute_dtype))
+        return jnp.einsum(eqn, xq, w)
+    return jnp.einsum(eqn, xq, pl.dequant(ctx.compute_dtype))
 
 
 def _scalar_scale(pl: PackedLinear) -> Array:
@@ -154,7 +296,10 @@ def kernel_eligible(eqn: str, pl: PackedLinear) -> Optional[str]:
         return None
     if not pl.a_signed and pl.a_bits > 7:
         return None  # unsigned 8-bit grid (qmax 255) overflows int8 codes
-    if pl.layout == "nib4" and pl.shape[-2] % 2 == 0:
+    if (pl.layout == "nib4" and pl.shape[-2] % 2 == 0
+            and not pl.sharded_layout()):
+        # the w4 kernel consumes the PLAIN nib4 byte stream; a per-shard
+        # re-broken layout (odd per-shard rows) must go through unpack
         return "pallas-w4"
     if pl.w_bits <= 8:
         return "pallas-int8"

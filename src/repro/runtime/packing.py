@@ -20,6 +20,21 @@ Codes are stored offset-binary (``u = q - qmin``) so packed bytes are
 unsigned; ``unpack_*`` restores the signed grid exactly (round-trip is
 property-tested in tests/test_runtime.py for odd channel counts).
 
+Tensor-parallel serving packs *per shard*: ``pack_linear(...,
+shard_dim=d, shard_count=n)`` splits the weight into ``n`` equal shards
+along its original tensor-parallel dim and packs each shard independently
+(each padded to its own byte/word boundary), then concatenates the shard
+layouts back along the packed counterpart of ``d``. The result is
+bit-identical, shard for shard, to packing each shard on its own — so
+sharding ``codes`` over a mesh axis hands every device exactly the packed
+slab it would have produced locally, and per-device HBM is
+``packed_bytes / shard_count`` (``per_shard_bytes``). Only two layouts
+actually change bytes under this: ``nib4``/``quad2`` when the shard dim IS
+the packed contraction dim (row-parallel) and the per-shard row count is
+not a multiple of the codes-per-byte, and ``bitstream`` always (the flat
+stream must break at shard boundaries). Everything else degenerates to the
+plain packing.
+
 Scales are per-channel ``(out,)`` over the weight's last dim. The serving
 session fills them with the trained per-tensor indicator-bank scale
 broadcast per channel (bit-exact with the fake-quant graph); statistics
@@ -29,7 +44,7 @@ quantization error when no trained scale is available.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +138,33 @@ def _layout_for(bits: int) -> str:
     return {8: "int8", 4: "nib4", 2: "quad2"}.get(bits, "bitstream")
 
 
+_PACK_MULT = {"nib4": 2, "quad2": 4}
+_PACK_FN = {"nib4": pack_nib4, "quad2": pack_quad2}
+
+
+def _split_shards(q: Array, dim: int, count: int):
+    if q.shape[dim] % count:
+        raise ValueError(
+            f"shard dim {dim} of size {q.shape[dim]} does not split into "
+            f"{count} equal shards")
+    return jnp.split(q, count, axis=dim)
+
+
+def _pack_sharded(q: Array, layout: str, bits: int, dim: int,
+                  count: int) -> Array:
+    """Pack each of ``count`` shards of ``q`` along ``dim`` independently.
+
+    Per-shard layouts are byte-aligned on their own (``nib4``/``quad2``
+    pad each shard's rows to the codes-per-byte multiple; ``bitstream``
+    gives each shard its own byte-aligned stream), then concatenated along
+    the packed counterpart of ``dim`` — dim itself for the row layouts,
+    axis 0 of the flat stream for ``bitstream``."""
+    shards = _split_shards(q, dim, count)
+    if layout == "bitstream":
+        return jnp.concatenate([pack_codes(s, bits) for s in shards])
+    return jnp.concatenate([_PACK_FN[layout](s) for s in shards], axis=dim)
+
+
 # ---------------------------------------------------------------------------
 # PackedLinear — the packed param-tree leaf
 # ---------------------------------------------------------------------------
@@ -150,12 +192,34 @@ class PackedLinear:
                                                default=())
     per_channel: bool = dataclasses.field(metadata=dict(static=True),
                                           default=False)
+    # tensor-parallel packing: the weight dim the codes were packed
+    # per-shard along (None = plain packing) and the shard count. Static so
+    # ``unpack`` can reassemble the per-shard layouts at trace time and
+    # ``dist.sharding.packed_specs`` can tell a shardable layout from one
+    # whose bytes would split mid-shard.
+    shard_dim: Optional[int] = dataclasses.field(metadata=dict(static=True),
+                                                 default=None)
+    shard_count: int = dataclasses.field(metadata=dict(static=True),
+                                         default=1)
+    # activation-reuse group: projections with the same input and the same
+    # (a_bits, a_signed, trained bank-scale values) share a tag, so the
+    # dispatch layer quantizes their common activation once per forward
+    # ("" = never reuse). Assigned by the serving session at pack time,
+    # where the bank values are concrete and comparable.
+    a_group: str = dataclasses.field(metadata=dict(static=True), default="")
 
     # -- accounting ---------------------------------------------------------
     @property
     def packed_bytes(self) -> int:
         """HBM bytes of the weight codes (scales reported separately)."""
         return int(np.prod(self.codes.shape)) * self.codes.dtype.itemsize
+
+    @property
+    def per_shard_bytes(self) -> int:
+        """Per-device HBM bytes of the codes once sharded ``shard_count``
+        ways (the full ``packed_bytes`` when packed unsharded/replicated).
+        Exact — per-shard packing makes the sharded codes dim divisible."""
+        return self.packed_bytes // max(self.shard_count, 1)
 
     @property
     def scale_bytes(self) -> int:
@@ -167,16 +231,49 @@ class PackedLinear:
         return float(lo), float(hi)
 
     # -- codes --------------------------------------------------------------
+    def sharded_layout(self) -> bool:
+        """True when the codes bytes differ from the plain packing — i.e.
+        they are a concatenation of independently packed shard slabs that
+        ``unpack`` must reassemble shard by shard."""
+        if self.shard_count <= 1 or self.shard_dim is None:
+            return False
+        if self.layout == "bitstream":
+            return True
+        d = self.shard_dim % len(self.shape)
+        return (self.layout in _PACK_MULT and d == len(self.shape) - 2
+                and (self.shape[-2] // self.shard_count) % _PACK_MULT[
+                    self.layout] != 0)
+
     def unpack(self) -> Array:
         """Exact signed integer codes in the weight's original shape."""
         n = int(np.prod(self.shape))
         if self.layout == "int8":
             return self.codes
+        if self.sharded_layout():
+            return self._unpack_sharded()
         if self.layout == "nib4":
             return unpack_nib4(self.codes, self.shape[-2])
         if self.layout == "quad2":
             return unpack_quad2(self.codes, self.shape[-2])
         return unpack_codes(self.codes, self.w_bits, n).reshape(self.shape)
+
+    def _unpack_sharded(self) -> Array:
+        """Inverse of the per-shard packing: split the codes into their
+        ``shard_count`` slabs, unpack each, and concatenate along the
+        original shard dim."""
+        d = (self.shard_dim or 0) % len(self.shape)
+        shard_shape = list(self.shape)
+        shard_shape[d] //= self.shard_count
+        if self.layout == "bitstream":
+            n_s = int(np.prod(shard_shape))
+            slabs = jnp.split(self.codes, self.shard_count)
+            parts = [unpack_codes(s, self.w_bits, n_s).reshape(shard_shape)
+                     for s in slabs]
+            return jnp.concatenate(parts, axis=d)
+        ks = shard_shape[-2]
+        unpack = unpack_nib4 if self.layout == "nib4" else unpack_quad2
+        slabs = jnp.split(self.codes, self.shard_count, axis=-2)
+        return jnp.concatenate([unpack(s, ks) for s in slabs], axis=-2)
 
     def dequant(self, dtype=jnp.float32) -> Array:
         """Dequantized weight — bit-exact with the fake-quant graph when
@@ -223,7 +320,9 @@ def channel_scales(w: Array, bits: int) -> Array:
 
 def pack_linear(w: Array, w_bits: int, s_w, a_bits: int, s_a, *,
                 a_signed: bool = True,
-                per_channel: bool = False) -> PackedLinear:
+                per_channel: bool = False,
+                shard_dim: Optional[int] = None,
+                shard_count: int = 1) -> PackedLinear:
     """Quantize ``w`` onto its searched grid and bit-pack the codes.
 
     ``s_w`` is the trained scale (the selected indicator-bank entry):
@@ -233,6 +332,11 @@ def pack_linear(w: Array, w_bits: int, s_w, a_bits: int, s_a, *,
     ``per_channel=True`` it is ignored and statistics per-channel scales
     are computed instead (not bit-exact vs the trained fake-quant graph —
     see module docstring).
+
+    ``shard_dim``/``shard_count`` request tensor-parallel per-shard packing
+    (module docstring): the quantized codes are identical — only the byte
+    layout changes, so each mesh shard of ``codes`` is exactly the packing
+    of its weight shard. ``w.shape[shard_dim]`` must split evenly.
     """
     w = jnp.asarray(w)
     out = w.shape[-1]
@@ -244,8 +348,17 @@ def pack_linear(w: Array, w_bits: int, s_w, a_bits: int, s_a, *,
             else s
     q = quantize_to_grid(w, w_bits, scale)
     layout = _layout_for(w_bits)
+    sharded = shard_count > 1 and shard_dim is not None
+    if sharded and w.shape[shard_dim] % shard_count:
+        raise ValueError(
+            f"shard dim {shard_dim} of weight shape {tuple(w.shape)} does "
+            f"not split into {shard_count} shards")
     if layout == "int8":
-        codes = q.astype(jnp.int8)
+        codes = q.astype(jnp.int8)   # byte-per-code: sharding never splits
+    elif sharded and (layout == "bitstream"
+                      or shard_dim % w.ndim == w.ndim - 2):
+        codes = _pack_sharded(q, layout, w_bits, shard_dim % w.ndim,
+                              shard_count)
     elif layout == "nib4":
         codes = pack_nib4(q)
     elif layout == "quad2":
@@ -257,7 +370,9 @@ def pack_linear(w: Array, w_bits: int, s_w, a_bits: int, s_a, *,
         s_a=jnp.asarray(s_a, jnp.float32),
         w_bits=int(w_bits), a_bits=int(a_bits), a_signed=bool(a_signed),
         layout=layout, shape=tuple(int(d) for d in w.shape),
-        per_channel=bool(per_channel))
+        per_channel=bool(per_channel),
+        shard_dim=(int(shard_dim) % w.ndim if sharded else None),
+        shard_count=int(shard_count) if sharded else 1)
 
 
 # ---------------------------------------------------------------------------
@@ -280,3 +395,11 @@ def tree_packed_bytes(tree) -> int:
 
 def tree_scale_bytes(tree) -> int:
     return sum(pl.scale_bytes for pl in packed_leaves(tree))
+
+
+def tree_per_shard_bytes(tree) -> int:
+    """Per-device HBM bytes of the packed codes under tensor-parallel
+    sharding: sharded leaves contribute ``packed_bytes / shard_count``,
+    replicated ones their full bytes — the number the per-chip memory gate
+    checks against ``MPQPolicy.size_bytes(..., per_shard=tp)``."""
+    return sum(pl.per_shard_bytes for pl in packed_leaves(tree))

@@ -13,6 +13,20 @@ packs once:
    at the policy's bit-widths and quantize + bit-pack the weight
    (``runtime.packing.pack_linear``) — HBM then holds ``ceil(bits/8)``
    bytes per weight, matching ``MPQPolicy.size_bytes`` to within padding.
+   Under a real mesh (``axes`` from ``dist.sharding.make_axes_for``) the
+   packing is *shard-aware*: each projection packs per shard along its
+   megatron tensor-parallel dim (``dist.sharding.projection_shard_fn``),
+   so ``codes`` shard over ``tp`` instead of replicating and per-chip HBM
+   is ``packed_bytes(per_shard=True)`` ≈ ``policy.size_bytes(per_shard=
+   tp)``. ``param_specs()`` exposes the matching PartitionSpec tree
+   (``dist.sharding.packed_specs``) for the engine's in_shardings.
+
+Packing also tags activation-reuse groups: projections on one site whose
+(a_bits, signedness, trained bank scale values) coincide get a shared
+``PackedLinear.a_group``, letting ``runtime.dispatch.act_reuse_scope``
+quantize their common input once per forward (wq/wk/wv; MoE wi/wg) —
+counted in ``act_quant_reused`` and surfaced as
+``EngineStats.act_quant_reused``.
 
 The session then exposes the engine's model-adapter interface (``prefill``
 / ``decode`` / ``init_state`` / ``state_per_slot``), so
@@ -115,6 +129,17 @@ class QuantizedSession:
         policy.validate(self.qlayers, bits=cfg.bits)
         self.sites = lm.iter_sites(cfg)
         self._lut = {int(b): i for i, b in enumerate(cfg.bits)}
+        self.act_quant_reused = 0      # trace-time hits, see dispatch
+        # Off-TPU, the model axis is a STORAGE axis only: packed codes
+        # shard over tp in HBM and gather at use (dispatch docstring), but
+        # the layer graph keeps no model-sharded intermediates — compute
+        # splits over dp alone (``dist.axes.dp_only`` rationale). On a TPU
+        # backend the full megatron split stays on, where the
+        # int-accumulating kernel routes make the eqn split exact.
+        from repro.dist.axes import dp_only
+        self.compute_axes = axes
+        if axes.enabled and jax.default_backend() != "tpu":
+            self.compute_axes = dp_only(axes)
         self.params = self._build_params(params)
 
     # -- construction -------------------------------------------------------
@@ -128,9 +153,13 @@ class QuantizedSession:
         return sub
 
     def _build_params(self, params) -> Dict[str, Any]:
+        from repro.dist import sharding
+
         by_site: Dict[int, List] = {}
         for q in self.qlayers:
             by_site.setdefault((q.segment, q.unit), []).append(q)
+        shard_info = (sharding.projection_shard_fn(self.cfg, self.axes)
+                      if self.axes.enabled else None)
 
         out: Dict[str, Any] = {
             k: params[k] for k in params if k not in ("prefix", "body",
@@ -138,9 +167,12 @@ class QuantizedSession:
         }
         sites_p: Dict[str, Any] = {}
         self._site_bits: Dict[str, Any] = {}
+        self._shard_plan: Dict[str, int] = {}
         for site in self.sites:
+            key = _site_key(site.gidx)
             sp = self._site_params(params, site)
             bits_d: Dict[str, Any] = {}
+            packed_paths: List[Tuple[str, ...]] = []
             for q in by_site[(site.segment, site.unit)]:
                 leaf = _get_path(sp, q.path)
                 w_idx = self._lut[self.policy.w_bits[q.name]]
@@ -150,28 +182,63 @@ class QuantizedSession:
                     s_w = effective_weight_scale(leaf["s_w"], w_idx,
                                                  leaf["w"].size, wb,
                                                  w_ndim=leaf["w"].ndim)
+                    sd, sc = (None, 1)
+                    if shard_info is not None:
+                        name = "/".join(("sites", key) + q.path + ("w",))
+                        sd, sc = shard_info(name, tuple(leaf["w"].shape))
+                    self._shard_plan[q.name] = sc
                     pl = packing.pack_linear(
                         leaf["w"], wb, s_w,
                         int(self.policy.a_bits[q.name]),
                         jnp.asarray(leaf["s_a"])[..., a_idx],
                         a_signed=self.cfg.quant_act_signed,
-                        per_channel=self.per_channel)
+                        per_channel=self.per_channel,
+                        shard_dim=sd, shard_count=sc)
                     _set_path(sp, q.path, pl)
+                    packed_paths.append(q.path)
                 else:
                     d: Dict[str, Any] = {}
                     lm._nest(d, q.path, {"w": w_idx, "a": a_idx})
                     # merged below via bits_d
                     bits_d = _merge(bits_d, d)
-            key = _site_key(site.gidx)
+            _tag_act_groups(sp, packed_paths, key)
             sites_p[key] = sp
             self._site_bits[key] = bits_d if self.mode == "reference" else None
         out["sites"] = sites_p
         return out
 
     # -- accounting ---------------------------------------------------------
-    def packed_bytes(self) -> int:
-        """Measured HBM bytes of the packed weight codes."""
+    def packed_bytes(self, per_shard: bool = False) -> int:
+        """Measured HBM bytes of the packed weight codes.
+
+        ``per_shard=True`` gives the per-device view under the session's
+        mesh: tensor-parallel-sharded leaves count ``bytes / shard_count``,
+        replicated ones their full bytes — comparable against
+        ``policy.size_bytes(qlayers, per_shard=axes.tp_size)``."""
+        if per_shard:
+            return packing.tree_per_shard_bytes(self.params)
         return packing.tree_packed_bytes(self.params)
+
+    def param_specs(self):
+        """PartitionSpec tree for ``self.params`` under the session's axes
+        (``dist.sharding.packed_specs``) — the engine's in_shardings hook."""
+        from repro.dist import sharding
+        return sharding.packed_specs(self.cfg, self.params, self.axes)
+
+    def per_shard_policy_bytes(self) -> float:
+        """Per-chip weight-bytes budget under this session's ACTUAL shard
+        plan: each searched projection's policy bytes divided by the
+        tensor-parallel factor its partition rule grants it. Equals
+        ``policy.size_bytes(per_shard=tp)`` when every projection shards
+        (the limpq-demo case); on archs where the divisibility fallbacks
+        legitimately replicate some projections (e.g. heads not dividing
+        the model axis) those count in full per chip — the per-chip gate
+        must not blame packing for a partition-rule fallback."""
+        total = 0.0
+        for q in self.qlayers:
+            bytes_q = q.w_params * self.policy.w_bits[q.name] / 8.0
+            total += bytes_q / max(self._shard_plan.get(q.name, 1), 1)
+        return total
 
     def scale_bytes(self) -> int:
         return packing.tree_scale_bytes(self.params)
@@ -195,31 +262,37 @@ class QuantizedSession:
 
     # -- engine adapter API -------------------------------------------------
     def _forward(self, params, x, img_x, mode, states, pos, prefill_cap):
+        from repro.runtime import dispatch
+
         new_states = {"sites": {}}
-        for site in self.sites:
-            key = _site_key(site.gidx)
-            st = None if states is None else states["sites"].get(key)
-            x, st, _ = lm.apply_layer(
-                site.kind, x, params["sites"][key], self._site_bits[key],
-                self.cfg, self.ctx, self.axes, mode=mode, state=st, pos=pos,
-                img_x=img_x, prefill_cap=prefill_cap)
-            new_states["sites"][key] = st
+        with dispatch.axes_scope(self.axes), \
+                dispatch.act_reuse_scope() as scope:
+            for site in self.sites:
+                key = _site_key(site.gidx)
+                st = None if states is None else states["sites"].get(key)
+                x, st, _ = lm.apply_layer(
+                    site.kind, x, params["sites"][key], self._site_bits[key],
+                    self.cfg, self.ctx, self.compute_axes, mode=mode,
+                    state=st, pos=pos, img_x=img_x, prefill_cap=prefill_cap)
+                new_states["sites"][key] = st
+        # trace-time count: quantize ops elided from this compiled graph
+        self.act_quant_reused += scope["hits"]
         return x, new_states
 
     def prefill(self, params, inputs, *, prefill_cap, true_len=None):
         x, img_x = lm.embed_inputs(params, self.cfg, inputs, self.ctx,
-                                   self.axes)
+                                   self.compute_axes)
         x, states = self._forward(params, x, img_x, "prefill", None, None,
                                   prefill_cap)
         return lm.finish_prefill(x, states, params, self.cfg, self.ctx,
-                                 self.axes, true_len)
+                                 self.compute_axes, true_len)
 
     def decode(self, params, tok, pos, states):
         x, _ = lm.embed_inputs(params, self.cfg, {"tokens": tok}, self.ctx,
-                               self.axes)
+                               self.compute_axes)
         x, new_states = self._forward(params, x, None, "decode", states, pos,
                                       None)
-        logits = lm.lm_head(x, params, self.cfg, self.ctx, self.axes)
+        logits = lm.lm_head(x, params, self.cfg, self.ctx, self.compute_axes)
         return logits[:, 0], new_states
 
     def init_state(self, batch, capacity, dtype, per_slot=True):
@@ -241,13 +314,50 @@ class QuantizedSession:
                         axes: MeshAxes = NO_AXES,
                         **kwargs) -> "QuantizedSession":
         """Restore a ``checkpoint.save_serving_bundle`` artifact (params +
-        policy) and pack it for serving."""
+        policy) and pack it for serving.
+
+        The bundled policy is validated against ``cfg``'s QLayer table
+        BEFORE the param restore touches the template: a stale or foreign
+        bundle fails loudly with the same ``MPQPolicy.validate`` message
+        path as ``lm.bits_from_policy``, instead of a cryptic
+        missing-array/shape error from the checkpoint reader."""
         from repro import checkpoint as ckpt
 
         template = lm.init_params(jax.random.PRNGKey(0), cfg)
-        params, policy, _ = ckpt.load_serving_bundle(directory, template,
-                                                     step=step)
+        params, policy, _ = ckpt.load_serving_bundle(
+            directory, template, step=step,
+            validate=lambda p: p.validate(lm.enumerate_qlayers(cfg),
+                                          bits=cfg.bits))
         return cls(cfg, params, policy, ctx, axes, **kwargs)
+
+
+def _tag_act_groups(sp, packed_paths, site_key: str) -> None:
+    """Assign ``PackedLinear.a_group`` reuse tags within one site.
+
+    Two packed projections may share a quantized activation only when
+    their quantization of it is bitwise the same op: equal a_bits, equal
+    signedness, and equal *values* in the selected trained bank scale.
+    The values are concrete here (packing happens eagerly at build), so
+    the grouping is exact — a tag is assigned only to groups of two or
+    more, and it embeds the site key so identical banks on different
+    sites (e.g. the same init value) can never alias across sites."""
+    import numpy as np
+
+    groups: Dict[Tuple, List[Tuple[str, ...]]] = {}
+    for path in packed_paths:
+        pl = _get_path(sp, path)
+        fp = (pl.a_bits, pl.a_signed,
+              np.asarray(pl.s_a, np.float32).tobytes())
+        groups.setdefault(fp, []).append(path)
+    gi = 0
+    for fp, paths in groups.items():
+        if len(paths) < 2:
+            continue
+        tag = f"{site_key}.a{gi}"
+        gi += 1
+        for path in paths:
+            pl = _get_path(sp, path)
+            _set_path(sp, path, dataclasses.replace(pl, a_group=tag))
 
 
 def _merge(dst: dict, src: dict) -> dict:
@@ -263,6 +373,9 @@ def summarize(session: QuantizedSession) -> Dict[str, Any]:
     """HBM accounting for logs / the quant-serve benchmark."""
     packed = session.packed_bytes()
     target = session.policy_bytes()
+    tp = session.axes.tp_size if session.axes.enabled else 1
+    per_shard = session.packed_bytes(per_shard=True)
+    shard_target = session.per_shard_policy_bytes()
     return {
         "mode": session.mode,
         "packed_bytes": int(packed),
@@ -274,4 +387,9 @@ def summarize(session: QuantizedSession) -> Dict[str, Any]:
         else float("nan"),
         "avg_bits": session.policy.avg_bits(),
         "kv_quant": session.kv_quant,
+        "tp_size": int(tp),
+        "per_shard_bytes": int(per_shard),
+        "per_shard_vs_policy": (per_shard / shard_target if shard_target
+                                else float("nan")),
+        "act_quant_reused": int(session.act_quant_reused),
     }

@@ -108,3 +108,62 @@ def test_sharded_step_matches_single_device_and_elastic_restore():
                          capture_output=True, text=True, timeout=900)
     assert "MULTIDEVICE_OK" in out.stdout, (out.stdout[-1000:],
                                             out.stderr[-3000:])
+
+
+# ---------------------------------------------------------------------------
+# quantized serving under a real mesh (8 host devices, 2-way dp x 4-way tp)
+# ---------------------------------------------------------------------------
+_QSERVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+
+from repro.dist import sharding
+from repro.runtime import packing, sharded_smoke
+
+ref, sharded = sharded_smoke.run_sharded_vs_single()
+sess, eng, axes = sharded["session"], sharded["engine"], sharded["axes"]
+got = sharded["tokens"]
+assert axes.tp_size == 4 and axes.dp_size == 2, (axes.tp_size, axes.dp_size)
+
+# (b) greedy tokens identical to the single-device session
+assert got == ref, {r: (ref[r], got[r]) for r in ref if ref[r] != got[r]}
+
+# (a) per-shard packed bytes ~= policy.size_bytes / tp within padding
+# (every limpq-demo dim divides, so the plan budget equals the ideal)
+per_shard = sess.packed_bytes(per_shard=True)
+budget = sess.policy.size_bytes(sess.qlayers, per_shard=axes.tp_size)
+assert budget == sess.per_shard_policy_bytes(), "demo arch must fully shard"
+assert per_shard <= budget * 1.05, (per_shard, budget)
+assert per_shard * axes.tp_size <= sess.packed_bytes() * 1.01
+
+# (c) no replicated codes leaf, in the specs or on the devices
+specs = sharding.packed_specs(sharded["cfg"], sess.params, axes)
+spec_leaves = [s for s in jax.tree.leaves(specs, is_leaf=packing.is_packed)
+               if packing.is_packed(s)]
+assert spec_leaves
+for s in spec_leaves:
+    assert any(e is not None for e in tuple(s.codes)), s
+placed = [p for p in jax.tree.leaves(eng.params, is_leaf=packing.is_packed)
+          if packing.is_packed(p)]
+assert placed
+for p in placed:
+    assert not p.codes.sharding.is_fully_replicated, p.shape
+    assert p.shard_count == axes.tp_size, (p.shape, p.shard_count)
+
+print("QSERVE_MESH_OK", per_shard, int(budget))
+"""
+
+
+@pytest.mark.slow
+def test_quantized_serving_sharded_over_host_mesh():
+    """Tentpole gate (ISSUE 4): the packed session under a 2x4 host mesh
+    serves greedy-token-identically to the single-device session, its
+    codes shard over tp (nothing replicates), and per-chip packed bytes
+    land on ``policy.size_bytes / tp`` within padding."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _QSERVE_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "QSERVE_MESH_OK" in out.stdout, (out.stdout[-1000:],
+                                            out.stderr[-3000:])

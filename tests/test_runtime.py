@@ -75,6 +75,88 @@ def test_pack_linear_matches_fake_quant(bits):
     assert pl.packed_bytes <= ideal + w.shape[-1] + 1
 
 
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 8])
+@pytest.mark.parametrize("dim,count", [(0, 4), (1, 2)])
+def test_shard_aware_packing_bit_identical_per_shard(bits, dim, count):
+    """pack_linear(shard_dim=, shard_count=): every shard's slab of the
+    packed codes equals packing that weight shard independently, and the
+    whole thing round-trips/dequantizes exactly like the plain packing."""
+    r = np.random.default_rng(bits)
+    w = r.normal(size=(24, 8)).astype(np.float32)
+    s = np.float32(0.05)
+    plain = packing.pack_linear(w, bits, s, 6, 0.02)
+    sh = packing.pack_linear(w, bits, s, 6, 0.02, shard_dim=dim,
+                             shard_count=count)
+    np.testing.assert_array_equal(np.asarray(sh.unpack()),
+                                  np.asarray(plain.unpack()))
+    np.testing.assert_array_equal(np.asarray(sh.dequant()),
+                                  np.asarray(plain.dequant()))
+    axis = 0 if sh.layout == "bitstream" else dim
+    slabs = np.split(np.asarray(sh.codes), count, axis=axis)
+    for slab, ws in zip(slabs, np.split(w, count, axis=dim)):
+        indep = packing.pack_linear(ws, bits, s, 6, 0.02)
+        np.testing.assert_array_equal(slab.reshape(-1),
+                                      np.asarray(indep.codes).reshape(-1))
+    assert sh.per_shard_bytes * count == sh.packed_bytes
+    assert plain.per_shard_bytes == plain.packed_bytes
+
+
+def test_sharded_nib4_layout_not_w4_eligible():
+    """A per-shard re-broken nib4 layout (odd per-shard rows) must not
+    feed the w4 kernel, which consumes the PLAIN byte stream — it falls
+    back to the unpack-based int8 route; plain packing stays w4-eligible."""
+    r = np.random.default_rng(0)
+    w = r.normal(size=(12, 8)).astype(np.float32)
+    sharded = packing.pack_linear(w, 4, np.float32(0.05), 6, 0.02,
+                                  shard_dim=0, shard_count=4)
+    assert sharded.sharded_layout()
+    assert dispatch.kernel_eligible("bsd,de->bse", sharded) == "pallas-int8"
+    plain = packing.pack_linear(w, 4, np.float32(0.05), 6, 0.02)
+    assert not plain.sharded_layout()
+    assert dispatch.kernel_eligible("bsd,de->bse", plain) == "pallas-w4"
+
+
+class _Mesh2x4:
+    axis_names = ("data", "model")
+    shape = {"data": 2, "model": 4}
+
+
+def test_packed_specs_shard_every_code_leaf():
+    """Under a 2x4 mesh every packed projection of the demo arch shards its
+    codes (no replicated sub-byte storage left), column-parallel scales
+    shard with their out dim, and the per-shard accounting lands on
+    policy.size_bytes / tp exactly (all dims divide -> zero padding)."""
+    from repro.dist import sharding
+    from repro.models.quant_layers import QuantContext as QC
+
+    cfg = smoke_config("limpq-demo")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = QC.make(cfg.bits, cfg.quant_act_signed, compute_dtype=jnp.float32)
+    ql = lm.enumerate_qlayers(cfg)
+    policy = MPQPolicy.uniform(ql, 4)
+    axes = sharding.make_axes_for(cfg, _Mesh2x4(), shard_seq=False)
+    assert axes.tp_size == 4
+    sess = QuantizedSession(cfg, params, policy, ctx, axes, kv_quant="int8")
+
+    specs = sharding.packed_specs(cfg, sess.params, axes)
+    leaves = {}
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=packing.is_packed)[0]:
+        if packing.is_packed(s):
+            leaves["/".join(str(getattr(k, "key", k)) for k in path)] = s
+    assert len(leaves) == len(ql)
+    for name, s in leaves.items():
+        assert any(e is not None for e in tuple(s.codes)), (name, s.codes)
+    # column-parallel scale shards, row-parallel scale replicates
+    assert tuple(leaves["sites/000/wq"].scale) == (("model",),)
+    assert tuple(leaves["sites/000/wo"].scale) == (None,)
+    # per-shard accounting: every leaf sharded 4-ways, dims all divide
+    per_shard = sess.packed_bytes(per_shard=True)
+    assert per_shard * 4 == sess.packed_bytes()
+    assert per_shard == policy.size_bytes(ql, per_shard=4)
+    assert policy.size_bytes(ql) == policy.size_bytes(ql, per_shard=1)
+
+
 def test_pack_linear_per_channel_reduces_error():
     r = np.random.default_rng(0)
     w = (r.normal(size=(16, 8)) * r.uniform(0.1, 4.0, size=8)).astype(
@@ -451,3 +533,55 @@ def test_session_rejects_foreign_policy(serving):
     foreign = MPQPolicy.uniform(lm.enumerate_qlayers(other), 4)
     with pytest.raises(ValueError, match="does not match"):
         QuantizedSession(s["cfg"], s["params"], foreign, s["ctx"])
+
+
+def test_from_checkpoint_validates_before_restore(serving, tmp_path):
+    """A bundle saved for one arch restored against another must fail with
+    the MPQPolicy.validate message (same path as bits_from_policy), not a
+    missing-array error from the checkpoint reader."""
+    from repro import checkpoint as ckpt
+    s = serving
+    ckpt.save_serving_bundle(str(tmp_path), 0, s["params"], s["policy"])
+    other = smoke_config("rwkv6-7b")
+    with pytest.raises(ValueError, match="does not match"):
+        QuantizedSession.from_checkpoint(str(tmp_path), other, ctx=s["ctx"])
+
+
+def test_activation_code_reuse_counts_and_stays_exact(serving):
+    """Satellite (ISSUE 4): under a uniform policy wq/wk/wv (and the two
+    gate-path MLP inputs) share one quantized activation per site — the
+    engine reports the elided quantize ops, and greedy tokens stay
+    identical to the per-layer-quantizing fake-quant reference."""
+    s = serving
+    ql = s["ql"]
+    uniform = MPQPolicy.uniform(ql, 4)
+    sess = QuantizedSession(s["cfg"], s["params"], uniform, s["ctx"],
+                            mode="packed", kv_quant="int8")
+    # pack-time tagging grouped projections with equal (a_bits, bank value)
+    tagged = [pl.a_group for pl in packing.packed_leaves(sess.params)]
+    assert any(tagged)
+    eng = DecodeEngine(sess.params, s["cfg"], None, s["ctx"], NO_AXES,
+                       EngineConfig(slots=2, cache_len=16, kv_quant="int8"),
+                       adapter=sess)
+    packed_out = _run(eng, s["reqs"])
+    # per compile: wq/wk/wv save 2, mlp_wg+mlp_wi save 1 -> 3 per site
+    assert eng.stats.act_quant_reused > 0
+    assert eng.stats.act_quant_reused % (3 * len(sess.sites)) == 0
+
+    bits = lm.bits_from_policy(s["cfg"], uniform, ql)
+    ref = DecodeEngine(s["params"], s["cfg"], bits, s["ctx"], NO_AXES,
+                       EngineConfig(slots=2, cache_len=16, kv_quant="fake"))
+    assert packed_out == _run(ref, s["reqs"])
+
+
+def test_mixed_policy_qkv_never_share_a_group(serving):
+    """The cyclic test policy gives wq/wk/wv distinct a_bits — the shared
+    hidden state must NOT be reused across them (reuse never crosses
+    bit-widths or bank values), so their tags are pairwise distinct."""
+    s = serving
+    sess = QuantizedSession(s["cfg"], s["params"], s["policy"], s["ctx"],
+                            mode="packed", kv_quant="int8")
+    for key, sp in sess.params["sites"].items():
+        trio = [sp[n].a_group for n in ("wq", "wk", "wv")]
+        named = [t for t in trio if t]
+        assert len(named) == len(set(named)), (key, trio)
