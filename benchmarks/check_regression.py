@@ -61,18 +61,28 @@ GATED_QUANT = {
     "sharded_tokens_generated": -1,
     "sharded_prefill_compiles": +1,
     "sharded_per_shard_vs_policy": +1,
+    # per-step decode-attention cache traffic of the fused int8 route
+    # (codes + scales + pos): growing = the cache inventory regressed
+    "decode_attn_hbm_bytes": +1,
 }
 INFO_QUANT = (
     "packed_tok_per_s",
     "reference_tok_per_s",
     "hbm_bytes_saved_per_step",
     "sharded_per_shard_bytes",
+    "decode_attn_model_vs_measured",
 )
 
 # boolean identity flags checked per profile (False or missing = failure)
 IDENTITY_FLAGS = {
     "serve": ("token_identical",),
-    "quant": ("token_identical", "sharded_token_identical"),
+    # decode_attn_bytes_match: the roofline's kv_hbm_bytes must stay
+    # within 5% of the fused route's measured cache traffic
+    "quant": (
+        "token_identical",
+        "sharded_token_identical",
+        "decode_attn_bytes_match",
+    ),
 }
 
 PROFILES = {

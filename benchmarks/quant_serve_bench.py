@@ -12,7 +12,15 @@ staggered request set, then writes ``benchmarks/out/BENCH_quant_serve.json``:
 * per-step FLOP/byte counters from the bit-aware roofline
   (``dist.roofline.decode_step_cost``) for the fp16/bf16-KV baseline vs
   the packed+int8-KV runtime — the arithmetic-intensity shift quantized
-  serving buys;
+  serving buys — including the "int8 stored but fp-attended" column
+  (``kv_attend="dequant"``) the fused decode-attention kernel removes;
+* the routed decode-attention story (gated): the packed engine runs with
+  the fused int8 decode-attention kernel forced through the Pallas
+  interpreter (``decode_attn_route``), so token identity vs the reference
+  graph covers the kernel program, and the measured per-step cache
+  traffic (``decode_attn_hbm_bytes`` = codes + scales + pos, from
+  ``runtime.kv_cache.cache_bytes``) must match the roofline's
+  ``kv_hbm_bytes`` within 5% (``decode_attn_bytes_match``);
 * wall-clock throughput for the artifact trail (never gated);
 * the SHARDED serving path (``--mesh host8``-equivalent: 2-way dp x 4-way
   tp over 8 forced host devices, run in a subprocess so this process
@@ -61,11 +69,11 @@ def _mixed_policy(cfg):
 
 
 def _step_counters(cfg, slots, cache_len, *, kv_bits, w_bits_total=None,
-                   avg_weight_bits=32.0, tp_size=1):
+                   avg_weight_bits=32.0, tp_size=1, kv_attend="fused"):
     cost = roofline.decode_step_cost(
         cfg, slots, cache_tokens=cache_len, kv_bits=kv_bits,
         w_bits_total=w_bits_total, avg_weight_bits=avg_weight_bits,
-        tp_size=tp_size)
+        tp_size=tp_size, kv_attend=kv_attend)
     chip = roofline.DEFAULT_CHIP
     flops = cost["compute_s"] * chip.peak_flops
     hbm = cost["memory_s"] * chip.hbm_bytes_s
@@ -120,29 +128,51 @@ def run(fast: bool = True):
                           stagger=True, arrive_every=p["arrive_every"])
     cache_len = p["prompt_len"] + p["gen"]
 
-    sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
-                            kv_quant="int8")
-    packed_eng = DecodeEngine(
-        sess.params, cfg, None, ctx, NO_AXES,
-        EngineConfig(slots=p["slots"], cache_len=cache_len, kv_quant="int8",
-                     bucket_prompts=True),
-        adapter=sess)
-    bits = lm.bits_from_policy(cfg, policy, ql)
-    ref_eng = DecodeEngine(
-        params, cfg, bits, ctx, NO_AXES,
-        EngineConfig(slots=p["slots"], cache_len=cache_len, kv_quant="fake"))
+    # the packed engine serves with the fused int8 decode-attention kernel
+    # on the hot path (interpret mode — the TPU program, executed
+    # step-by-step): the token-identity gate below therefore proves the
+    # kernel against the dequant reference over a full staggered workload.
+    # The force scope wraps build AND runs (route resolves at trace time).
+    from repro.runtime import dispatch, kv_cache as qkv
 
-    results = {}
-    for name, eng in (("packed", packed_eng), ("reference", ref_eng)):
-        eng.submit_all(reqs)        # warmup pass: pay the jit compiles
-        eng.run()
-        eng.reset()
-        eng.submit_all(reqs)
-        completions = eng.run()
-        results[name] = {
-            "stats": eng.stats.as_dict(),
-            "tokens": {r.rid: completions[r.rid].tokens for r in reqs},
-        }
+    with dispatch.force_decode_attn("fused-interpret"):
+        sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+                                kv_quant="int8")
+        packed_eng = DecodeEngine(
+            sess.params, cfg, None, ctx, NO_AXES,
+            EngineConfig(slots=p["slots"], cache_len=cache_len,
+                         kv_quant="int8", bucket_prompts=True),
+            adapter=sess)
+        bits = lm.bits_from_policy(cfg, policy, ql)
+        ref_eng = DecodeEngine(
+            params, cfg, bits, ctx, NO_AXES,
+            EngineConfig(slots=p["slots"], cache_len=cache_len,
+                         kv_quant="fake"))
+
+        results = {}
+        for name, eng in (("packed", packed_eng), ("reference", ref_eng)):
+            eng.submit_all(reqs)    # warmup pass: pay the jit compiles
+            eng.run()
+            eng.reset()
+            eng.submit_all(reqs)
+            completions = eng.run()
+            results[name] = {
+                "stats": eng.stats.as_dict(),
+                "tokens": {r.rid: completions[r.rid].tokens for r in reqs},
+            }
+
+    # measured per-step decode-attention cache traffic: the fused route
+    # scans the whole ring buffer every step, so one step's traffic is the
+    # resident inventory — codes + scales + pos over every layer cache
+    measured_kv = sum(
+        qkv.cache_bytes(c) for c in jax.tree.leaves(
+            packed_eng.state,
+            is_leaf=lambda x: isinstance(x, qkv.QuantKVCache))
+        if isinstance(c, qkv.QuantKVCache))
+    model_kv = roofline.decode_step_cost(
+        cfg, p["slots"], cache_tokens=cache_len, kv_bits=8.0,
+        kv_attend="fused")["kv_hbm_bytes"]
+    kv_ratio = model_kv / measured_kv if measured_kv else float("nan")
 
     identical = results["packed"]["tokens"] == results["reference"]["tokens"]
     info = summarize(sess)
@@ -152,6 +182,11 @@ def run(fast: bool = True):
                              avg_weight_bits=16.0),
         "quantized": _step_counters(cfg, p["slots"], cache_len, kv_bits=8.0,
                                     w_bits_total=w_bits_total),
+        # int8 stored but fp-attended: what the dequant fallback pays per
+        # step — the honesty gap the fused decode-attention kernel closes
+        "quantized_fp_attended": _step_counters(
+            cfg, p["slots"], cache_len, kv_bits=8.0,
+            w_bits_total=w_bits_total, kv_attend="dequant"),
         # per-shard view of the same quantized step under 4-way tp: HBM
         # per chip and the megatron all-reduce bytes the tp split pays
         "quantized_tp4": _step_counters(cfg, p["slots"], cache_len,
@@ -170,6 +205,10 @@ def run(fast: bool = True):
         "prefill_compiles": pstats["prefill_compiles"],
         "packed_vs_policy": info["packed_vs_policy"],
         "packed_vs_fp32": 1.0 / info["compression_vs_fp32"],
+        "decode_attn_route": pstats["decode_attn_route"],
+        "decode_attn_hbm_bytes": int(measured_kv),
+        "decode_attn_model_vs_measured": kv_ratio,
+        "decode_attn_bytes_match": bool(abs(kv_ratio - 1.0) <= 0.05),
         # informational
         "packed_bytes": info["packed_bytes"],
         "scale_bytes": info["scale_bytes"],
@@ -197,7 +236,12 @@ def run(fast: bool = True):
           f"{out['decode_steps']} | prefill shapes {out['prefill_compiles']} "
           f"(reference {out['reference_prefill_compiles']})")
     print(f"  roofline step bytes: fp {counters['fp']['step_hbm_bytes']:.2e}"
-          f" -> quantized {counters['quantized']['step_hbm_bytes']:.2e}")
+          f" -> quantized {counters['quantized']['step_hbm_bytes']:.2e} "
+          f"(fp-attended int8: "
+          f"{counters['quantized_fp_attended']['step_hbm_bytes']:.2e})")
+    print(f"  decode-attn route {out['decode_attn_route']} | cache traffic "
+          f"{out['decode_attn_hbm_bytes']} B/step measured, model x"
+          f"{kv_ratio:.3f}")
     tp4 = counters["quantized_tp4"]
     print(f"  tp=4 per-shard HBM {tp4['per_shard_hbm_bytes']:.2e} B/step | "
           f"all-reduce {tp4['allreduce_wire_bytes']:.2e} B/step | sharded "
@@ -212,6 +256,11 @@ def run(fast: bool = True):
         "sharded session diverged from the single-device session"
     assert sharded["sharded_per_shard_vs_policy"] <= 1.05, \
         "per-shard packed bytes exceed policy.size_bytes/tp beyond padding"
+    assert out["decode_attn_route"] == "fused-interpret", \
+        "packed engine did not run the fused decode-attention route"
+    assert out["decode_attn_bytes_match"], \
+        (f"decode_step_cost kv bytes off the measured cache inventory by "
+         f"more than 5% (x{kv_ratio:.3f})")
     return out
 
 

@@ -72,6 +72,7 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
                      cache_tokens: int = 0, tp_size: int = 1,
                      avg_weight_bits: float = 8.0,
                      kv_bits: float = 16.0,
+                     kv_attend: str = "fused",
                      w_bits_total: Optional[float] = None,
                      chip: ChipSpec = DEFAULT_CHIP) -> dict:
     """Analytic three-term roofline for ONE continuous-batching decode step.
@@ -93,10 +94,26 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
     searched policy (``MPQPolicy.size_bytes(qlayers) * 8``; falls back to
     ``w_params * avg_weight_bits``), and ``kv_bits`` sizes a cache element
     (16 = bf16, 8 = the int8 KV cache, which also charges its 4-byte
-    per-row per-head write-time scales).
+    per-row per-head write-time scales AND the int32 per-slot position
+    rows — the same inventory ``runtime.kv_cache.cache_bytes`` measures).
 
-    Returns the three terms plus ``step_s``/``dominant``.
+    ``kv_attend`` distinguishes how an int8 cache is *attended* (it is
+    ignored for fp caches):
+
+    * ``"fused"``   — the fused decode-attention kernel reads the codes
+      directly; cache traffic is codes + scales + pos.
+    * ``"dequant"`` — int8 stored but fp-attended: the XLA fallback
+      materializes the dequantized cache in HBM every step, adding a bf16
+      write + read of every cache element on top of the code read. This
+      is what the engine actually pays off-TPU, so ``suggest_prefill_chunk``
+      budgets honestly instead of assuming the kernel route.
+
+    Returns the three terms plus ``step_s``/``dominant`` and the raw
+    ``hbm_bytes``/``kv_hbm_bytes``/``wire_bytes`` counters.
     """
+    if kv_attend not in ("fused", "dequant"):
+        raise ValueError(f"kv_attend must be 'fused' or 'dequant', "
+                         f"got {kv_attend!r}")
     from repro.models import lm   # local import: lm imports dist.axes
     qlayers = lm.enumerate_qlayers(cfg)
     macs = sum(q.macs_per_token * q.n_mats for q in qlayers)
@@ -117,10 +134,20 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
         w_bytes = w_params * (avg_weight_bits / 8.0) / tp
     kv_elems = 2.0 * kv_rows * n_slots * cfg.kv_dim * n_kv_layers
     kv_bytes = kv_elems * (kv_bits / 8.0) / tp
-    if kv_bits <= 8:   # int8 KV: per-row per-head f32 scales ride along
+    if kv_bits <= 8:
+        # int8 KV: per-row per-head f32 scales and the int32 per-slot
+        # position row ride along with the codes (one pos buffer serves
+        # both k and v) — matching runtime.kv_cache.cache_bytes
         n_heads_kv = max(cfg.kv_dim // max(cfg.hd, 1), 1)
         kv_bytes += (2.0 * kv_rows * n_slots * n_heads_kv
                      * n_kv_layers * 4.0 / tp)
+        # the pos row has no KV-head dim to split over tp: every model
+        # shard reads the full position inventory to mask its attention
+        kv_bytes += kv_rows * n_slots * n_kv_layers * 4.0
+        if kv_attend == "dequant":
+            # int8 stored but fp-attended: the fallback materializes the
+            # dequantized cache in HBM each step (bf16 write + read)
+            kv_bytes += 2.0 * kv_elems * 2.0 / tp
     memory_s = (w_bytes + kv_bytes) / chip.hbm_bytes_s
     wire = (2.0 * 2 * cfg.n_layers * n_slots * cfg.d_model
             * 2 * (tp_size - 1) / max(tp_size, 1)) if tp_size > 1 else 0.0
@@ -133,14 +160,19 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
             "collective_s": collective_s, "step_s": max(terms.values()),
             "dominant": dominant,
             # raw byte counters for the serving benches: per-shard HBM
-            # traffic of one decode step and the tp all-reduce wire bytes
-            "hbm_bytes": w_bytes + kv_bytes, "wire_bytes": wire}
+            # traffic of one decode step (weights + KV, and the KV share
+            # alone — the decode-attention bytes gate compares kv_hbm_bytes
+            # against the measured cache inventory) and the tp all-reduce
+            # wire bytes
+            "hbm_bytes": w_bytes + kv_bytes, "kv_hbm_bytes": kv_bytes,
+            "wire_bytes": wire}
 
 
 def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
                           cache_tokens: int = 0, tp_size: int = 1,
                           avg_weight_bits: float = 8.0,
                           kv_bits: float = 16.0,
+                          kv_attend: str = "fused",
                           w_bits_total: Optional[float] = None,
                           chip: ChipSpec = DEFAULT_CHIP,
                           min_chunk: int = 16, max_chunk: int = 512) -> int:
@@ -157,8 +189,8 @@ def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
     """
     cost = decode_step_cost(cfg, n_slots, cache_tokens=cache_tokens,
                             tp_size=tp_size, avg_weight_bits=avg_weight_bits,
-                            kv_bits=kv_bits, w_bits_total=w_bits_total,
-                            chip=chip)
+                            kv_bits=kv_bits, kv_attend=kv_attend,
+                            w_bits_total=w_bits_total, chip=chip)
     ceiling = max(cost["memory_s"], cost["collective_s"])
     headroom_s = max(ceiling - cost["compute_s"], 0.0)
     from repro.models import lm

@@ -80,6 +80,22 @@ def quantize_int8(v, s, bits: int = 8):
 
 
 # ---------------------------------------------------------------------------
+# fused int8 decode attention
+# ---------------------------------------------------------------------------
+def decode_attn_quant(q, k_codes, k_scale, v_codes, v_scale, pos_arr, q_pos,
+                      *, window=None, interpret=None):
+    """One-token decode attention directly on int8 KV codes + f32 scales
+    (no HBM-resident dequantized cache). ``interpret=None`` follows the
+    backend; the ``fused-interpret`` dispatch route pins it True."""
+    from repro.kernels import quant_attention as _qa
+    if interpret is None:
+        interpret = _interpret_default()
+    return _qa.decode_attn_quant(q, k_codes, k_scale, v_codes, v_scale,
+                                 pos_arr, q_pos, window=window,
+                                 interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # rwkv wkv
 # ---------------------------------------------------------------------------
 def wkv(r, k, v, log_w, u, chunk: int = _wkv.DEFAULT_CHUNK):

@@ -1,0 +1,164 @@
+"""Fused int8 decode-attention Pallas kernel (TPU target, interpret-validated).
+
+The serving engine's int8 KV cache stores codes + per-row per-head f32
+scales, but until this kernel the decode step dequantized the *whole* ring
+buffer to fp in HBM before attending (``models.attention`` dequant path) —
+decode-attention HBM traffic stayed bf16/f32-sized and the ``kv_bits=8``
+roofline term was storage-only. Here the codes are the kernel operands:
+
+* K codes (int8) load straight from the cache ring buffer into VMEM; the
+  logits compute as ``(q . k_codes) * k_scale`` — the K-scale folds into
+  the logit columns *after* the dot, so the MXU/VPU contraction runs on the
+  raw codes and HBM never holds a dequantized K row.
+* V codes likewise: the PV accumulation is ``(p * v_scale) @ v_codes`` —
+  the V-scale rides the probability row into the second dot.
+* Masking is position-driven, exactly the dequant reference's inventory:
+  a slot attends iff ``0 <= slot_pos <= q_pos`` (and, for sliding-window
+  archs, ``q_pos - slot_pos < window``). Ring wraparound therefore needs
+  no special handling — slots carry absolute positions, order never
+  matters — and evicted slots (``pos == -1``) mask out wherever they sit.
+* GQA: the grid runs one program per (batch row, kv head); its q block is
+  the (G, hd) group sharing that head, so K/V blocks are fetched once per
+  group (same layout trick as ``kernels.flash_attention``).
+
+Softmax state (m, l, acc) lives in VMEM scratch across the sequential kv
+grid dimension (online softmax), so capacities larger than one kv block
+stream block-by-block. Numerics: logits/probs/PV all accumulate in f32;
+the result matches the dequant reference to fp-rounding (scale folding
+reassociates one multiply), which preserves greedy-argmax tokens — the
+contract the serve smoke and ``benchmarks/quant_serve_bench.py`` gate.
+
+A zero KV row quantizes to codes 0 with the ``KV_SCALE_EPS`` floor scale;
+its logit here is ``(q . 0) * eps = 0`` *exactly*, bit-identical to the
+reference's ``q . (0 * eps) = 0`` — no ``0 * eps^-1`` term ever forms
+because the kernel multiplies by the scale, never divides.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+DEFAULT_KV_BLOCK = 256
+
+
+def _qdec_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, qp_ref,
+                 o_ref, m_ref, l_ref, acc_ref, *, n_kv, window):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (G, hd) f32, pre-scaled
+    kc = k_ref[0].astype(jnp.float32)              # (kvb, hd) from int8 codes
+    ks = ks_ref[0]                                 # (kvb,) f32 row scales
+    kpos = pos_ref[0]                              # (kvb,) int32 abs position
+    qp = qp_ref[0, 0]                              # scalar int32 query pos
+
+    # contraction on the CODES; the K-scale folds into the logit columns in
+    # VMEM — a zero row (codes 0, eps-floored scale) lands at exactly 0.0
+    logits = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = logits * ks[None, :]
+    valid = (kpos >= 0) & (kpos <= qp)
+    if window is not None:
+        valid &= qp - kpos < window
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[None, :]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])           # (G, kvb)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    # V-scale folds into the probability row; the second dot runs on codes
+    pv = jax.lax.dot_general(p * vs_ref[0][None, :],
+                             v_ref[0].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attn_quant(q, k_codes, k_scale, v_codes, v_scale, pos_arr, q_pos,
+                      *, window: Optional[int] = None,
+                      kv_block: int = DEFAULT_KV_BLOCK,
+                      interpret: bool = False):
+    """One-token decode attention directly on int8 KV codes.
+
+    q: (B, 1, H, hd) fp queries; k/v_codes: (B, Sc, KV, hd) int8;
+    k/v_scale: (B, Sc, KV) f32 per-row per-head write-time scales;
+    pos_arr: (B, Sc) int32 absolute slot positions (-1 = empty);
+    q_pos: (B,) int32 per-row query positions. The shared-position cache
+    layout broadcasts its ``(Sc,)`` pos / scalar q_pos before calling.
+    Returns (B, 1, H, hd) f32.
+
+    Rows whose slots are ALL masked softmax uniformly (the engine discards
+    inactive-slot output); note the uniform mean then includes kv-block
+    padding slots, so such rows are finite but not comparable against the
+    unpadded reference — same contract as the engine's.
+    """
+    B, Sc, KV, hd = k_codes.shape
+    H = q.shape[2]
+    G = H // KV
+    assert H == KV * G and q.shape[1] == 1, (q.shape, k_codes.shape)
+
+    qf = (q.reshape(B, KV, G, hd).astype(jnp.float32) * (hd ** -0.5))
+    qf = qf.reshape(B * KV, G, hd)
+    kf = k_codes.transpose(0, 2, 1, 3).reshape(B * KV, Sc, hd)
+    vf = v_codes.transpose(0, 2, 1, 3).reshape(B * KV, Sc, hd)
+    ks = k_scale.transpose(0, 2, 1).reshape(B * KV, Sc).astype(jnp.float32)
+    vs = v_scale.transpose(0, 2, 1).reshape(B * KV, Sc).astype(jnp.float32)
+    pos2 = jnp.asarray(pos_arr, jnp.int32)
+    qp = jnp.asarray(q_pos, jnp.int32).reshape(B, 1)
+
+    kvb = min(kv_block, Sc)
+    pad = (-Sc) % kvb
+    if pad:
+        # padded slots carry pos -1: masked exactly like evicted slots
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, pad)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad)))
+        pos2 = jnp.pad(pos2, ((0, 0), (0, pad)), constant_values=-1)
+    n_kv = (Sc + pad) // kvb
+
+    out = pl.pallas_call(
+        functools.partial(_qdec_kernel, n_kv=n_kv, window=window),
+        grid=(B * KV, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, kvb, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, kvb), lambda b, j: (b, j)),
+            pl.BlockSpec((1, kvb, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, kvb), lambda b, j: (b, j)),
+            pl.BlockSpec((1, kvb), lambda b, j, KV=KV: (b // KV, j)),
+            pl.BlockSpec((1, 1), lambda b, j, KV=KV: (b // KV, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, ks, vf, vs, pos2, qp)
+
+    return out.reshape(B, KV, G, hd).reshape(B, 1, H, hd)

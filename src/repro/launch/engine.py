@@ -34,8 +34,13 @@ Execution model (host loop, three jitted device functions):
 
 ``EngineConfig.kv_quant`` flips the per-slot KV caches to int8 codes with
 per-head write-time scales (``repro.runtime.kv_cache``), halving decode
-HBM traffic per cache element; the roofline-driven prefill budget sees the
-quantized bytes through ``decode_step_cost(kv_bits=8)``.
+HBM traffic per cache element. How the cache is *attended* routes through
+``runtime.dispatch.resolve_decode_attn`` (fused Pallas kernel on codes vs
+the dequant-fp fallback); the engine resolves the route once at build
+(``stats.decode_attn_route``) and the roofline-driven prefill budget
+charges the matching bytes through ``decode_step_cost(kv_bits=8,
+kv_attend=...)`` — "int8 stored but fp-attended" costs more than "int8
+attended" and the budget reflects which one this process actually runs.
 
 Mesh execution: when ``axes`` carries a real mesh (``dist.sharding
 .make_axes_for``), the engine resolves partition specs once at build —
@@ -102,6 +107,7 @@ class EngineStats:
     prefill_tokens: int = 0
     prefill_compiles: int = 0  # distinct prompt shapes fed to the jit cache
     act_quant_reused: int = 0  # activation quantize ops elided per compile
+    decode_attn_route: str = "fp"  # fused | fused-interpret | dequant-fp | fp
     admitted: int = 0
     completed: int = 0
     tokens_generated: int = 0
@@ -223,17 +229,31 @@ class DecodeEngine:
             if kv_mode == "int8"
             else 8.0 * np.dtype(self.ecfg.state_dtype).itemsize
         )
+        # which route decode attention takes over the int8 cache: resolved
+        # once here for the roofline budget and the stats/bench trail (the
+        # jitted decode resolves the same dispatch at trace time, so a
+        # force_decode_attn scope must wrap build AND first run)
+        if kv_mode == "int8":
+            from repro.runtime import dispatch as _dispatch
+
+            self.decode_attn_route = _dispatch.resolve_decode_attn()
+        else:
+            self.decode_attn_route = "fp"
+        kv_attend = (
+            "fused" if self.decode_attn_route.startswith("fused") else "dequant"
+        )
         chunk = self.ecfg.prefill_chunk or roofline.suggest_prefill_chunk(
             cfg,
             self.ecfg.slots,
             cache_tokens=self.ecfg.cache_len,
             kv_bits=kv_bits,
+            kv_attend=kv_attend,
             w_bits_total=getattr(adapter, "w_bits_total", None),
             chip=self.ecfg.chip,
         )
         self.prefill_chunk = int(chunk)
         self.scheduler = scheduler or Scheduler(self.ecfg.policy, self.prefill_chunk)
-        self.stats = EngineStats()
+        self.stats = EngineStats(decode_attn_route=self.decode_attn_route)
         # the adapter's reuse counter is lifetime-cumulative across every
         # trace it ever ran; stats report the delta since this engine's
         # build (reset() re-snapshots), i.e. ops elided by THIS engine's
@@ -372,7 +392,7 @@ class DecodeEngine:
         self.scheduler = Scheduler(
             policy or self.scheduler.policy, self.prefill_chunk
         )
-        self.stats = EngineStats()
+        self.stats = EngineStats(decode_attn_route=self.decode_attn_route)
         self.slots = [None] * self.ecfg.slots
         self.completions = {}
         self._act_reuse_base = getattr(self.adapter, "act_quant_reused", 0)

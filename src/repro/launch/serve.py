@@ -25,10 +25,19 @@ in/out_shardings. The smoke then adds a per-chip gate: per-shard packed
 bytes must not exceed ``policy.size_bytes / tp`` beyond padding, while
 greedy tokens stay identical to the single-device reference.
 
+``--decode-attn`` pins how the int8 KV cache is attended
+(``runtime.dispatch.resolve_decode_attn``): ``fused`` is the Pallas
+kernel reading codes directly (TPU), ``fused-interpret`` runs the same
+kernel program through the interpreter (the CI proof that the fused route
+stays greedy-token-identical to the reference), ``dequant-fp`` is the
+exact fallback, ``auto`` (default) resolves by backend.
+
 Examples:
   python -m repro.launch.serve --smoke
   python -m repro.launch.serve --write-demo-policy searched.json
   python -m repro.launch.serve --smoke --policy searched.json
+  python -m repro.launch.serve --smoke --policy searched.json \
+      --decode-attn fused-interpret
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.serve --smoke --policy searched.json \
       --mesh host8
@@ -50,6 +59,7 @@ from repro.launch.engine import DecodeEngine, EngineConfig
 from repro.launch.scheduler import POLICIES, Request
 from repro.models import lm
 from repro.models.quant_layers import QuantContext
+from repro.runtime import dispatch
 
 
 def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0):
@@ -167,7 +177,8 @@ def serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes=NO_AXES):
           f"(+{s['scale_bytes']} B scales) vs policy accounting "
           f"{s['policy_bytes']:.0f} B (x{s['packed_vs_policy']:.3f}) | "
           f"{s['compression_vs_fp32']:.2f}x smaller than fp32 | "
-          f"kv={s['kv_quant']} | prefill shapes compiled: "
+          f"kv={s['kv_quant']} decode-attn={eng.decode_attn_route} | "
+          f"prefill shapes compiled: "
           f"{eng.stats.prefill_compiles} | act quantizes reused: "
           f"{eng.stats.act_quant_reused}")
     if axes.enabled and axes.tp_size > 1:
@@ -253,6 +264,12 @@ def main(argv=None):
                          "quantized runtime (repro.runtime.session)")
     ap.add_argument("--kv", default="int8", choices=("int8", "fp"),
                     help="KV-cache storage for the --policy runtime")
+    ap.add_argument("--decode-attn", default="auto",
+                    choices=("auto",) + dispatch.DECODE_ATTN_ROUTES,
+                    help="decode-attention route over the int8 KV cache: "
+                         "auto resolves fused on TPU / dequant-fp "
+                         "elsewhere; fused-interpret runs the Pallas "
+                         "kernel through the interpreter (CI equivalence)")
     ap.add_argument("--mesh", default=None,
                     help="serve under a device mesh: host ((1,)) | host8 "
                          "(2-way data x 4-way tensor parallel; needs "
@@ -301,7 +318,11 @@ def main(argv=None):
         print(f"mesh {mesh_label}: dp={axes.dp_size} tp={axes.tp_size}")
 
     if args.policy:
-        serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes)
+        # the force scope must cover engine build AND runs: the route is
+        # resolved both at build (roofline accounting) and at trace time
+        forced = None if args.decode_attn == "auto" else args.decode_attn
+        with dispatch.force_decode_attn(forced):
+            serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes)
         return
 
     if axes.enabled and jax.default_backend() != "tpu":

@@ -448,41 +448,52 @@ def _attend_rows(q: Array, k: Array, v: Array, pos_arr: Array, pos: Array,
     return jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(B, 1, H, hd)
 
 
-def _decode_attention_slots(q: Array, cache: KVCache, k_new: Array,
-                            v_new: Array, pos: Array, *,
-                            window: Optional[int]):
-    """Per-slot one-token decode: row b writes at slot ``pos[b] % cap``."""
+def ring_write(cache, k_new: Array, v_new: Array, pos):
+    """Write one decode token row into the ring buffer — the single
+    quantize-and-write sequence shared by all four cache quadrants
+    (fp/int8 x shared/per-slot), so their semantics cannot drift.
+
+    The slot is ``mod(max(pos, 0), cap)`` in every quadrant: a negative
+    sentinel position (an inactive engine slot riding along in the decode
+    batch) clamps to slot 0 and stamps ``pos = -1`` there — never valid to
+    attend — instead of wrapping to ``cap - 1`` and clobbering the ring's
+    tail codes/scales. For an int8 cache the new row quantizes here with
+    its own per-head write-time scale. Returns the updated cache.
+    """
     cap = cache.k.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     slot = jnp.mod(jnp.maximum(pos, 0), cap)
-    k = jax.vmap(_row_update)(cache.k, k_new, slot)
-    v = jax.vmap(_row_update)(cache.v, v_new, slot)
-    pos_arr = jax.vmap(_row_update)(cache.pos, pos[:, None], slot)
-    out = _attend_rows(q, k, v, pos_arr, pos, window)
-    return out, KVCache(k=k, v=v, pos=pos_arr)
+    rows = {"k": k_new, "v": v_new}
+    if isinstance(cache, QuantKVCache):
+        rows["k"], rows["k_scale"] = qkv.quantize_rows(k_new)
+        rows["v"], rows["v_scale"] = qkv.quantize_rows(v_new)
+    if cache.pos.ndim == 2:                        # per-slot: pos (B, Sc)
+        upd = {f: jax.vmap(_row_update)(getattr(cache, f), r, slot)
+               for f, r in rows.items()}
+        upd["pos"] = jax.vmap(_row_update)(cache.pos, pos[:, None], slot)
+    else:                                          # shared: pos (Sc,)
+        upd = {f: jax.lax.dynamic_update_slice_in_dim(getattr(cache, f), r,
+                                                      slot, axis=1)
+               for f, r in rows.items()}
+        upd["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, pos[None], slot, axis=0)
+    return cache._replace(**upd)
 
 
-def _decode_attention_slots_quant(q: Array, cache: QuantKVCache,
-                                  k_new: Array, v_new: Array, pos: Array, *,
-                                  window: Optional[int]):
-    """Per-slot decode over an int8 cache: the new row quantizes with its
-    own per-head write-time scale, lands in the code/scale buffers, and the
-    whole cache dequantizes (exact per row) for the masked softmax."""
-    cap = cache.k.shape[1]
-    pos = jnp.asarray(pos, jnp.int32)
-    slot = jnp.mod(jnp.maximum(pos, 0), cap)
-    kq, ksc = qkv.quantize_rows(k_new)                  # (B,1,KV,hd) (B,1,KV)
-    vq, vsc = qkv.quantize_rows(v_new)
-    k = jax.vmap(_row_update)(cache.k, kq, slot)
-    v = jax.vmap(_row_update)(cache.v, vq, slot)
-    k_scale = jax.vmap(_row_update)(cache.k_scale, ksc, slot)
-    v_scale = jax.vmap(_row_update)(cache.v_scale, vsc, slot)
-    pos_arr = jax.vmap(_row_update)(cache.pos, pos[:, None], slot)
-    kf = qkv.dequantize(k, k_scale, k_new.dtype)
-    vf = qkv.dequantize(v, v_scale, v_new.dtype)
-    out = _attend_rows(q, kf, vf, pos_arr, pos, window)
-    return out, QuantKVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale,
-                             pos=pos_arr)
+def _attend_quant_fused(q: Array, cache: QuantKVCache, pos: Array,
+                        window: Optional[int], route: str) -> Array:
+    """Fused decode attention on int8 codes (kernels.quant_attention).
+    The shared-position layout broadcasts its mask inputs to the per-slot
+    shape the kernel takes; codes/scales pass through untouched."""
+    from repro.kernels import ops
+    pos_arr, q_pos = cache.pos, pos
+    if pos_arr.ndim == 1:
+        B = q.shape[0]
+        pos_arr = jnp.broadcast_to(pos_arr[None], (B,) + pos_arr.shape)
+        q_pos = jnp.broadcast_to(q_pos[None], (B,))
+    return ops.decode_attn_quant(
+        q, cache.k, cache.k_scale, cache.v, cache.v_scale, pos_arr, q_pos,
+        window=window, interpret=True if route == "fused-interpret" else None)
 
 
 def decode_attention(q: Array, cache, k_new: Array, v_new: Array,
@@ -490,33 +501,32 @@ def decode_attention(q: Array, cache, k_new: Array, v_new: Array,
     """One-token decode: write (k_new, v_new) at slot pos % capacity, then
     attend over the cache. RoPE is applied before caching, so slot order is
     irrelevant to the softmax. With a per-slot cache (pos (B, Sc)) ``pos``
-    is a (B,) vector and each row masks independently. An int8
-    ``QuantKVCache`` stores codes + per-head scales instead of fp rows and
-    dequantizes exactly at attend time."""
+    is a (B,) vector and each row masks independently.
+
+    An int8 ``QuantKVCache`` stores codes + per-head scales instead of fp
+    rows; the attend step routes through ``runtime.dispatch
+    .resolve_decode_attn`` — the fused Pallas kernel reads the codes
+    directly (TPU, or interpret mode when forced), the dequant-fp fallback
+    rebuilds exact fp rows first (default off-TPU, and the numerics
+    reference the fused route is token-gated against).
+    """
     quant = isinstance(cache, QuantKVCache)
-    if cache.pos.ndim == 2:
-        fn = _decode_attention_slots_quant if quant else _decode_attention_slots
-        return fn(q, cache, k_new, v_new, pos, window=window)
-    cap = cache.k.shape[1]
-    slot = jnp.mod(pos, cap)
-    pos_arr = jax.lax.dynamic_update_slice_in_dim(
-        cache.pos, jnp.asarray(pos, jnp.int32)[None], slot, axis=0)
-    q_pos = jnp.asarray(pos, jnp.int32)[None]
+    out_dtype = v_new.dtype
+    new = ring_write(cache, k_new, v_new, pos)
+    pos32 = jnp.asarray(pos, jnp.int32)
     if quant:
-        kq, ksc = qkv.quantize_rows(k_new)
-        vq, vsc = qkv.quantize_rows(v_new)
-        k = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
-        k_scale = jax.lax.dynamic_update_slice_in_dim(
-            cache.k_scale, ksc, slot, axis=1)
-        v_scale = jax.lax.dynamic_update_slice_in_dim(
-            cache.v_scale, vsc, slot, axis=1)
-        out = direct_attention(q, qkv.dequantize(k, k_scale, k_new.dtype),
-                               qkv.dequantize(v, v_scale, v_new.dtype),
-                               q_pos, pos_arr, causal=True, window=window)
-        return out, QuantKVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale,
-                                 pos=pos_arr)
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
-    out = direct_attention(q, k, v, q_pos, pos_arr, causal=True, window=window)
-    return out, KVCache(k=k, v=v, pos=pos_arr)
+        from repro.runtime import dispatch
+        route = dispatch.resolve_decode_attn()
+        if route != "dequant-fp":
+            out = _attend_quant_fused(q, new, pos32, window, route)
+            return out.astype(out_dtype), new
+        k = qkv.dequantize(new.k, new.k_scale, k_new.dtype)
+        v = qkv.dequantize(new.v, new.v_scale, out_dtype)
+    else:
+        k, v = new.k, new.v
+    if new.pos.ndim == 2:
+        out = _attend_rows(q, k, v, new.pos, pos32, window)
+    else:
+        out = direct_attention(q, k, v, pos32[None], new.pos, causal=True,
+                               window=window)
+    return out, new

@@ -96,6 +96,49 @@ def _w_contracted_dims(eqn: str):
 
 
 # ---------------------------------------------------------------------------
+# decode-attention routing (int8 KV cache)
+# ---------------------------------------------------------------------------
+# Decode attention over a ``QuantKVCache`` resolves one of three routes —
+# the matmul registry's sibling for the serving hot path:
+#
+# * ``fused``           — the Pallas kernel attends directly on the int8
+#   codes + f32 scales (kernels.quant_attention): decode-attention HBM
+#   traffic is code-sized. TPU backends only.
+# * ``fused-interpret`` — the same kernel program through the Pallas
+#   interpreter: CI's proof that the fused route is greedy-token-identical
+#   to the dequant reference without TPU hardware.
+# * ``dequant-fp``      — dequantize the whole cache and run the fp masked
+#   softmax (models.attention). Exact reference; default off-TPU.
+#
+# Like matmul routes, resolution happens at trace time; the engine also
+# resolves once at build for its roofline accounting, so a force scope
+# must wrap engine construction AND its first run.
+DECODE_ATTN_ROUTES = ("fused", "fused-interpret", "dequant-fp")
+_DECODE_ATTN: List[Optional[str]] = [None]
+
+
+@contextlib.contextmanager
+def force_decode_attn(name: Optional[str]):
+    """Pin the int8 decode-attention route (tests/CLI; None restores auto)."""
+    if name is not None and name not in DECODE_ATTN_ROUTES:
+        raise ValueError(
+            f"unknown decode-attention route {name!r}: {DECODE_ATTN_ROUTES}")
+    _DECODE_ATTN.append(name)
+    try:
+        yield
+    finally:
+        _DECODE_ATTN.pop()
+
+
+def resolve_decode_attn(backend: Optional[str] = None) -> str:
+    """Route for decode attention over an int8 KV cache (see above)."""
+    if _DECODE_ATTN[-1] is not None:
+        return _DECODE_ATTN[-1]
+    backend = backend or jax.default_backend()
+    return "fused" if backend == "tpu" else "dequant-fp"
+
+
+# ---------------------------------------------------------------------------
 # activation-code reuse (one quantize per site for wq/wk/wv-style fans)
 # ---------------------------------------------------------------------------
 _SCOPE: List[Optional[dict]] = [None]

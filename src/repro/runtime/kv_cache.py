@@ -79,7 +79,13 @@ def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
 
 
 def cache_bytes(cache: QuantKVCache) -> int:
-    """Measured HBM bytes of one quantized cache (codes + scales)."""
+    """Measured HBM bytes of one quantized cache: codes + scales + the
+    int32 position buffer. The ``pos`` rows are part of the resident cache
+    (and of every decode step's attention read — the mask is
+    position-driven), so omitting them undercounted measured HBM vs what
+    the roofline's ``decode_step_cost(kv_bits<=8)`` models; both now use
+    this same inventory."""
     import numpy as np
     return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-               for a in (cache.k, cache.v, cache.k_scale, cache.v_scale))
+               for a in (cache.k, cache.v, cache.k_scale, cache.v_scale,
+                         cache.pos))
