@@ -71,6 +71,12 @@ INFO_QUANT = (
     "hbm_bytes_saved_per_step",
     "sharded_per_shard_bytes",
     "decode_attn_model_vs_measured",
+    # request-latency percentiles + roofline calibration ratios from the
+    # obs metrics registry: wall-clock / host-dependent, never gated
+    "ttft_p50_ms",
+    "ttft_p95_ms",
+    "itl_p50_ms",
+    "roofline_modeled_vs_measured",
 )
 
 # boolean identity flags checked per profile (False or missing = failure)
@@ -131,11 +137,17 @@ def main(argv=None):
         if regressed:
             failures.append(f"{metric} regressed {delta:+.1%}")
     for metric in info_metrics:
-        if metric in cur:
-            print(
-                f"  [info] {metric}: {cur[metric]:.1f} "
-                f"(baseline {base.get(metric, float('nan')):.1f}, not gated)"
-            )
+        if metric not in cur:
+            continue
+        c = cur[metric]
+        if isinstance(c, dict):
+            # e.g. roofline_modeled_vs_measured: {phase: ratio}
+            pairs = ", ".join(f"{k}=x{v:.1f}" for k, v in sorted(c.items()))
+            print(f"  [info] {metric}: {pairs} (not gated)")
+            continue
+        b = base.get(metric)
+        btxt = f"{b:.1f}" if isinstance(b, (int, float)) else "n/a"
+        print(f"  [info] {metric}: {c:.1f} (baseline {btxt}, not gated)")
 
     if failures:
         print("\nREGRESSION: " + "; ".join(failures))

@@ -164,11 +164,7 @@ def run(fast: bool = True):
     # measured per-step decode-attention cache traffic: the fused route
     # scans the whole ring buffer every step, so one step's traffic is the
     # resident inventory — codes + scales + pos over every layer cache
-    measured_kv = sum(
-        qkv.cache_bytes(c) for c in jax.tree.leaves(
-            packed_eng.state,
-            is_leaf=lambda x: isinstance(x, qkv.QuantKVCache))
-        if isinstance(c, qkv.QuantKVCache))
+    measured_kv = qkv.tree_cache_bytes(packed_eng.state)
     model_kv = roofline.decode_step_cost(
         cfg, p["slots"], cache_tokens=cache_len, kv_bits=8.0,
         kv_attend="fused")["kv_hbm_bytes"]
@@ -196,6 +192,16 @@ def run(fast: bool = True):
     }
     sharded = _sharded_counters(p)
     pstats = results["packed"]["stats"]
+    # measured-vs-modeled phase ratios from the packed engine's (warmed)
+    # measured epoch — the roofline calibration loop, ungated in CI: the
+    # ratios are host-dependent, their *presence and finiteness* is not
+    from repro.obs import calibrate
+    calib = calibrate.calibrate(
+        cfg, pstats, slots=p["slots"], cache_tokens=cache_len,
+        kv_bits=packed_eng.kv_bits, kv_attend=packed_eng.kv_attend,
+        w_bits_total=w_bits_total)
+    assert calib["finite"], \
+        f"roofline calibration produced non-finite ratios: {calib['rows']}"
     out = {
         "preset": p,
         "token_identical": identical,
@@ -225,6 +231,14 @@ def run(fast: bool = True):
         "packed_tok_per_s": pstats["decode_tokens_per_s"],
         "reference_tok_per_s":
             results["reference"]["stats"]["decode_tokens_per_s"],
+        # request-latency percentiles from the engine's metrics registry
+        # (wall-clock: artifact trail only, never gated)
+        "ttft_p50_ms": pstats.get("ttft_p50_ms", 0.0),
+        "ttft_p95_ms": pstats.get("ttft_p95_ms", 0.0),
+        "itl_p50_ms": pstats.get("itl_p50_ms", 0.0),
+        "itl_p95_ms": pstats.get("itl_p95_ms", 0.0),
+        "roofline_modeled_vs_measured": {
+            r["phase"]: r["ratio"] for r in calib["rows"]},
     }
     out.update(sharded)
     os.makedirs(OUT_DIR, exist_ok=True)

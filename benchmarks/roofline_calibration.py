@@ -1,0 +1,110 @@
+"""Roofline calibration harness: measured engine phases vs the step model.
+
+Serves a warmed-up staggered workload through the continuous-batching
+engine, then replays the measured per-phase timings (``perf_counter``-
+fenced by the engine's instrumented call sites) against the
+``dist.roofline.decode_step_cost`` / ``suggest_prefill_chunk`` model the
+scheduler budgeted with (``repro.obs.calibrate``). Writes
+``benchmarks/out/BENCH_roofline_calibration.json``:
+
+* the measured-vs-modeled row per phase (decode step, prefill token,
+  TTFT) — printed as the same table ``serve --smoke`` emits;
+* the **device-table stanza**: the effective HBM bandwidth / FLOP rate
+  this host actually delivered, in ``ChipSpec`` field names, ready for
+  ``dist.roofline.chip_from_table``;
+* the engine stats snapshot the rows were derived from.
+
+Nothing here is regression-gated: the ratios measure the *host* (a CPU
+interpreter sits orders of magnitude off a TPU v5e envelope by design).
+The run itself asserts only that every ratio is finite and positive, and
+that a ``chip_from_table`` round-trip accepts the stanza.
+
+Usage: PYTHONPATH=src python -m benchmarks.run --only roofline_calibration
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OUT_DIR
+from repro.configs import smoke_config
+from repro.core.policy import MPQPolicy
+from repro.data import SyntheticLM
+from repro.dist import roofline
+from repro.dist.axes import NO_AXES
+from repro.launch.engine import DecodeEngine, EngineConfig
+from repro.launch.serve import build_requests
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+from repro.obs import calibrate
+
+BENCH_PATH = os.path.join(OUT_DIR, "BENCH_roofline_calibration.json")
+
+
+def bench_preset(fast: bool = True):
+    n_req = 6 if fast else 16
+    return dict(arch="limpq-demo", slots=4, prompt_len=16, gen=8,
+                n_requests=n_req, uniform_bits=4)
+
+
+def run(fast: bool = True):
+    p = bench_preset(fast)
+    cfg = smoke_config(p["arch"])
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    ql = lm.enumerate_qlayers(cfg)
+    policy = MPQPolicy.uniform(ql, p["uniform_bits"])
+    bits = lm.bits_from_policy(cfg, policy, ql)
+    data = SyntheticLM(cfg)
+    reqs = build_requests(data, p["n_requests"], p["prompt_len"], p["gen"],
+                          stagger=True)
+    cache_len = p["prompt_len"] + p["gen"]
+
+    eng = DecodeEngine(params, cfg, bits, ctx, NO_AXES,
+                       EngineConfig(slots=p["slots"], cache_len=cache_len))
+    # warmup epoch: compile time in the timers would calibrate the jit
+    # cache, not the device — reset() starts a fresh measured epoch
+    eng.submit_all(reqs)
+    eng.run()
+    eng.reset()
+    eng.submit_all(reqs)
+    eng.run()
+    stats = eng.stats.as_dict()
+
+    report = calibrate.calibrate(
+        cfg, stats, slots=p["slots"], cache_tokens=cache_len,
+        kv_bits=eng.kv_bits, kv_attend=eng.kv_attend,
+        w_bits_total=getattr(eng.adapter, "w_bits_total", None),
+        chip=eng.ecfg.chip)
+    print(calibrate.render_table(report["rows"]))
+    table = report["device_table"]
+    print(f"  measured device table: hbm_bytes_s={table['hbm_bytes_s']:.3e} "
+          f"peak_flops={table['peak_flops']:.3e} ({table['name']})")
+    assert report["finite"], \
+        f"calibration produced non-finite/non-positive ratios: " \
+        f"{report['rows']}"
+    # the stanza must round-trip into a usable ChipSpec
+    measured_chip = roofline.chip_from_table(table)
+    assert measured_chip.hbm_bytes_s > 0 and measured_chip.peak_flops > 0
+
+    out = {
+        "preset": p,
+        "chip": report["chip"],
+        "rows": report["rows"],
+        "device_table": table,
+        "finite": report["finite"],
+        "stats": stats,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"  -> {BENCH_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,10 @@
   quant_serve_bench  —          packed mixed-precision runtime vs the
                                 fake-quant reference graph (writes
                                 BENCH_quant_serve.json for the CI gate)
+  roofline_calibration  —       measured engine phases vs the roofline
+                                step-cost model + measured device table
+                                (writes BENCH_roofline_calibration.json;
+                                informational, never gated)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
 """
@@ -24,7 +28,7 @@ import traceback
 MODULES = ["kernel_report", "search_efficiency", "joint_training",
            "ablation_reverse", "search_bitops", "search_size",
            "hessian_baseline", "feasibility", "roofline_report",
-           "serve_bench", "quant_serve_bench"]
+           "serve_bench", "quant_serve_bench", "roofline_calibration"]
 
 
 def main():

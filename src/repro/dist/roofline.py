@@ -35,6 +35,25 @@ class ChipSpec:
 DEFAULT_CHIP = ChipSpec()
 
 
+def chip_from_table(table: dict, base: ChipSpec = DEFAULT_CHIP) -> ChipSpec:
+    """Build a ``ChipSpec`` from a measured device-table stanza.
+
+    ``table`` is what ``repro.obs.calibrate.calibrate`` emits (and what
+    ``benchmarks/roofline_calibration.py`` writes into its bench JSON):
+    ``ChipSpec`` field names mapped to measured values, plus bookkeeping
+    keys (``source``, ...) that are ignored. Unmeasured fields keep
+    ``base``'s envelope, and non-positive measurements are rejected —
+    a zero bandwidth would turn every roofline term infinite silently.
+    """
+    fields = {f.name for f in dataclasses.fields(ChipSpec)}
+    updates = {k: v for k, v in table.items() if k in fields}
+    for k, v in updates.items():
+        if k != "name" and (not isinstance(v, (int, float)) or v <= 0):
+            raise ValueError(f"device table {k}={v!r}: measured envelope "
+                             "values must be positive numbers")
+    return dataclasses.replace(base, **updates)
+
+
 @dataclasses.dataclass
 class RooflineReport:
     arch: str

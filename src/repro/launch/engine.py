@@ -56,6 +56,20 @@ single-device behavior bit-exactly.
 Inactive slots still occupy compute (the decode batch is static — standard
 for continuous-batching engines); the win is scheduling, measured by
 ``EngineStats.decode_steps`` / ``slot_steps``.
+
+Observability (``repro.obs``): every engine owns a
+``MetricsRegistry`` (``engine.metrics``) and a ``TraceRecorder``
+(``engine.trace``). Counters/gauges/histograms are the source of truth —
+``engine.stats`` is a *snapshot* property that renders the registry into
+an ``EngineStats`` (so a captured ``stats`` object stays frozen across
+``reset()``), and ``as_dict()`` carries the TTFT / inter-token-latency
+percentiles the histograms accumulate. Each request traces its lifecycle
+(``admit`` → ``prefill`` span → ``first_token`` → per-decode-tick
+``token`` instants → ``complete``/``evict``); phase timers use
+``time.perf_counter`` and stamp only after ``jax.block_until_ready`` on
+the FULL output tree (logits *and* the new cache state), so async cache
+writes can never leak into the next phase's timing. ``serve
+--trace-out`` exports the trace as JSONL or Chrome-trace/Perfetto.
 """
 from __future__ import annotations
 
@@ -78,6 +92,8 @@ from repro.launch.scheduler import (
 )
 from repro.models import attention as attn
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -95,10 +111,20 @@ class EngineConfig:
     kv_quant: str = "none"  # "none" | "int8" | "fake" (reference numerics)
     bucket_prompts: bool = False  # pow-2 prompt padding to bound re-jits
     bucket_min: int = 8  # smallest prompt bucket
+    trace: bool = True  # record the per-request lifecycle event trace
 
 
 @dataclasses.dataclass
 class EngineStats:
+    """A frozen-on-read snapshot of the engine's metrics registry.
+
+    The engine never mutates an ``EngineStats`` — instrumented call sites
+    write ``engine.metrics`` counters/gauges/histograms and the ``stats``
+    property renders this view on access. ``latency`` carries the
+    percentile summary of the TTFT / inter-token / per-phase histograms
+    and is flattened into ``as_dict()``.
+    """
+
     iterations: int = 0  # scheduler ticks (admission and/or decode)
     decode_steps: int = 0  # jitted decode launches
     slot_steps: int = 0  # sum over decode steps of slots emitting a token
@@ -113,6 +139,7 @@ class EngineStats:
     tokens_generated: int = 0
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
+    latency: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -125,6 +152,7 @@ class EngineStats:
 
     def as_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
+        d.update(d.pop("latency"))
         d["decode_tokens_per_s"] = self.decode_tokens_per_s
         d["total_tokens_per_s"] = self.total_tokens_per_s
         return d
@@ -187,15 +215,33 @@ class LMAdapter:
 class _Slot:
     """Host-side bookkeeping for one engine slot."""
 
-    __slots__ = ("req", "next_tok", "next_pos", "gen", "done", "admitted_at")
+    __slots__ = (
+        "req",
+        "next_tok",
+        "next_pos",
+        "gen",
+        "done",
+        "admitted_at",
+        "ts_admit",
+        "ts_last_token",
+    )
 
-    def __init__(self, req: Request, first_tok: int, now: int):
+    def __init__(
+        self,
+        req: Request,
+        first_tok: int,
+        now: int,
+        ts_admit: float = 0.0,
+        ts_last_token: float = 0.0,
+    ):
         self.req = req
         self.next_tok = first_tok
         self.next_pos = req.prompt_len
         self.gen: List[int] = [first_tok]
         self.done = False
         self.admitted_at = now
+        self.ts_admit = ts_admit  # trace-clock stamp of the admit event
+        self.ts_last_token = ts_last_token  # last emitted token (ITL base)
 
 
 class DecodeEngine:
@@ -242,6 +288,10 @@ class DecodeEngine:
         kv_attend = (
             "fused" if self.decode_attn_route.startswith("fused") else "dequant"
         )
+        # the roofline budget shape, kept for obs.calibrate to replay the
+        # measured timings against the same model the engine planned with
+        self.kv_bits = float(kv_bits)
+        self.kv_attend = kv_attend
         chunk = self.ecfg.prefill_chunk or roofline.suggest_prefill_chunk(
             cfg,
             self.ecfg.slots,
@@ -252,8 +302,10 @@ class DecodeEngine:
             chip=self.ecfg.chip,
         )
         self.prefill_chunk = int(chunk)
-        self.scheduler = scheduler or Scheduler(self.ecfg.policy, self.prefill_chunk)
-        self.stats = EngineStats(decode_attn_route=self.decode_attn_route)
+        self._init_obs()
+        self.scheduler = scheduler or Scheduler(
+            self.ecfg.policy, self.prefill_chunk, metrics=self.metrics
+        )
         # the adapter's reuse counter is lifetime-cumulative across every
         # trace it ever ran; stats report the delta since this engine's
         # build (reset() re-snapshots), i.e. ops elided by THIS engine's
@@ -275,6 +327,7 @@ class DecodeEngine:
             # shards, everything else on its megatron home, before any jit
             self.params = jax.device_put(self.params, self._param_shardings)
         self.state = self._fresh_state()
+        self._set_cache_gauges()
 
         # prompt-length bucketing bounds prefill recompiles, but padded
         # prompt tokens would perturb recurrent state (rwkv/rec scans run
@@ -367,6 +420,82 @@ class DecodeEngine:
                 out_shardings=ss,
             )
 
+    # -- observability -------------------------------------------------------
+    def _init_obs(self) -> None:
+        """Fresh metrics registry + trace recorder for one serving epoch.
+
+        Counters are monotonic *within* an epoch; ``reset()`` starts a new
+        epoch with a new registry, so any previously captured
+        ``EngineStats`` snapshot (and the old registry itself) stays
+        frozen instead of being rewound.
+        """
+        self.metrics = obs_metrics.MetricsRegistry()
+        self.trace = obs_trace.TraceRecorder() if self.ecfg.trace else None
+        m = self.metrics
+        m.gauge(
+            "engine.slots", help="configured concurrent-sequence capacity"
+        ).set(self.ecfg.slots)
+        m.gauge("engine.prefill_chunk").set(self.prefill_chunk)
+        # registry-side route record; the string itself stays on
+        # self.decode_attn_route / EngineStats.decode_attn_route
+        m.counter(f"engine.decode_attn_route.{self.decode_attn_route}").inc()
+        # the adapter shares the registry so runtime.dispatch can count
+        # routes chosen / activation-reuse hits at trace time
+        if hasattr(self.adapter, "metrics"):
+            self.adapter.metrics = self.metrics
+        if hasattr(self.adapter, "packed_bytes"):
+            m.gauge(
+                "engine.packed_bytes", help="resident packed weight codes"
+            ).set(self.adapter.packed_bytes())
+        if hasattr(self.adapter, "scale_bytes"):
+            m.gauge("engine.scale_bytes").set(self.adapter.scale_bytes())
+
+    def _set_cache_gauges(self) -> None:
+        """Resident KV-cache inventory gauges (int8 caches; fp caches have
+        no quantized inventory to itemize)."""
+        from repro.runtime import kv_cache as qkv
+
+        inv = qkv.tree_inventory(self.state)
+        m = self.metrics
+        m.gauge(
+            "engine.kv_cache_bytes", help="codes + scales + pos, all quantized caches"
+        ).set(sum(inv.values()))
+        for part, nbytes in inv.items():
+            m.gauge(f"engine.kv_{part}_bytes").set(nbytes)
+
+    @property
+    def stats(self) -> EngineStats:
+        """Render the metrics registry into a frozen ``EngineStats``
+        snapshot (see the dataclass docstring)."""
+        m = self.metrics
+
+        def c(name: str) -> int:
+            return int(m.value(f"engine.{name}"))
+
+        lat: Dict[str, float] = {}
+        for key in ("ttft", "itl", "decode_step", "prefill"):
+            h = m.get(f"engine.{key}_ms")
+            if isinstance(h, obs_metrics.Histogram) and h.count:
+                lat[f"{key}_p50_ms"] = h.percentile(0.50)
+                lat[f"{key}_p95_ms"] = h.percentile(0.95)
+        return EngineStats(
+            iterations=c("iterations"),
+            decode_steps=c("decode_steps"),
+            slot_steps=c("slot_steps"),
+            padded_slot_steps=c("padded_slot_steps"),
+            prefill_calls=c("prefill_calls"),
+            prefill_tokens=c("prefill_tokens"),
+            prefill_compiles=c("prefill_compiles"),
+            act_quant_reused=c("act_quant_reused"),
+            decode_attn_route=self.decode_attn_route,
+            admitted=c("admitted"),
+            completed=c("completed"),
+            tokens_generated=c("tokens_generated"),
+            t_prefill_s=m.value("engine.t_prefill_s"),
+            t_decode_s=m.value("engine.t_decode_s"),
+            latency=lat,
+        )
+
     def _fresh_state(self):
         """Allocate the per-slot decode state and, under a mesh, place it
         on its resolved shardings (computed once, then reused by reset)."""
@@ -386,17 +515,22 @@ class DecodeEngine:
         return state
 
     def reset(self, policy: Optional[str] = None) -> None:
-        """Clear queue, slots, stats, and decode state — but keep the jitted
-        prefill/decode/insert/evict functions, so an engine can serve many
-        request sets without recompiling."""
+        """Clear queue, slots, metrics/trace epoch, and decode state — but
+        keep the jitted prefill/decode/insert/evict functions, so an engine
+        can serve many request sets without recompiling. Previously
+        captured ``stats`` snapshots (and the old registry/trace objects)
+        stay frozen; the engine starts a fresh observability epoch."""
+        self._init_obs()
         self.scheduler = Scheduler(
-            policy or self.scheduler.policy, self.prefill_chunk
+            policy or self.scheduler.policy,
+            self.prefill_chunk,
+            metrics=self.metrics,
         )
-        self.stats = EngineStats(decode_attn_route=self.decode_attn_route)
         self.slots = [None] * self.ecfg.slots
         self.completions = {}
         self._act_reuse_base = getattr(self.adapter, "act_quant_reused", 0)
         self.state = self._fresh_state()
+        self._set_cache_gauges()
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -434,17 +568,42 @@ class DecodeEngine:
     def _finish(self, idx: int, now: int) -> None:
         slot = self.slots[idx]
         assert slot is not None
-        self.completions[slot.req.rid] = Completion(
-            rid=slot.req.rid,
+        rid = slot.req.rid
+        self.completions[rid] = Completion(
+            rid=rid,
             prompt_len=slot.req.prompt_len,
             tokens=slot.gen[: slot.req.max_new],
             admitted_at=slot.admitted_at,
             finished_at=now,
         )
-        self.stats.completed += 1
-        self.stats.tokens_generated += len(slot.gen[: slot.req.max_new])
+        m = self.metrics
+        m.counter("engine.completed").inc()
+        m.counter("engine.tokens_generated").inc(len(slot.gen[: slot.req.max_new]))
         self.slots[idx] = None
+        m.gauge("engine.slot_occupancy").set(len(self._occupied()))
         self.state = self._evict(self.state, jnp.asarray(idx, jnp.int32))
+        if self.trace is not None:
+            ts = self.trace.now()
+            track = obs_trace.req_track(rid)
+            self.trace.instant(
+                "complete",
+                track=track,
+                ts=ts,
+                rid=rid,
+                tokens=len(slot.gen),
+                iteration=now,
+            )
+            self.trace.span(
+                "request",
+                slot.ts_admit,
+                ts,
+                track=track,
+                rid=rid,
+                prompt_len=slot.req.prompt_len,
+                tokens=len(slot.gen),
+                slot=idx,
+            )
+            self.trace.instant("evict", track=track, rid=rid, slot=idx)
 
     def _mark_done(self, idx: int, now: int) -> None:
         """Sequence finished: free immediately (continuous) or hold the slot
@@ -469,7 +628,8 @@ class DecodeEngine:
             inputs.update(
                 {k: jnp.asarray(v)[None] for k, v in req.extra_inputs.items()}
             )
-        t0 = time.time()
+        ts_admit = self.trace.now() if self.trace is not None else time.perf_counter()
+        t0 = time.perf_counter()
         if self._bucket:
             logits, row = self._prefill(
                 self.params, inputs, jnp.asarray(plen, jnp.int32)
@@ -477,18 +637,56 @@ class DecodeEngine:
         else:
             logits, row = self._prefill(self.params, inputs)
         self._prefill_shapes.add(int(toks.shape[-1]))
-        self.stats.prefill_compiles = len(self._prefill_shapes)
-        self.stats.act_quant_reused = (
-            getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
-        )
         row = self.adapter.state_per_slot(row)
         self.state = self._insert(self.state, row, jnp.asarray(idx, jnp.int32))
-        first = int(jax.block_until_ready(jnp.argmax(logits[0], -1)))
-        self.stats.t_prefill_s += time.time() - t0
-        self.stats.prefill_calls += 1
-        self.stats.prefill_tokens += plen
-        self.stats.admitted += 1
-        self.slots[idx] = _Slot(req, first, now)
+        first_arr = jnp.argmax(logits[0], -1)
+        # fence the FULL output tree (sampled token AND the inserted cache
+        # state), so the stamp covers device work, not dispatch latency
+        jax.block_until_ready((first_arr, self.state))
+        dt = time.perf_counter() - t0
+        first = int(first_arr)
+        m = self.metrics
+        m.counter("engine.t_prefill_s").inc(dt)
+        m.counter("engine.prefill_calls").inc()
+        m.counter("engine.prefill_tokens").inc(plen)
+        m.counter("engine.admitted").inc()
+        m.gauge("engine.prefill_compiles").set(len(self._prefill_shapes))
+        m.gauge("engine.act_quant_reused").set(
+            getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
+        )
+        m.histogram("engine.prefill_ms").observe(dt * 1e3)
+        # the first token is sampled from the prefill logits, so TTFT for an
+        # admitted request IS the fenced prefill duration (queue wait is the
+        # scheduler's ledger, not the engine's)
+        m.histogram("engine.ttft_ms").observe(dt * 1e3)
+        self.slots[idx] = _Slot(req, first, now, ts_admit, ts_admit + dt)
+        m.gauge("engine.slot_occupancy").set(len(self._occupied()))
+        if self.trace is not None:
+            track = obs_trace.req_track(req.rid)
+            self.trace.instant(
+                "admit",
+                track=track,
+                ts=ts_admit,
+                rid=req.rid,
+                slot=idx,
+                prompt_len=plen,
+                iteration=now,
+            )
+            self.trace.span(
+                "prefill",
+                ts_admit,
+                ts_admit + dt,
+                track=track,
+                rid=req.rid,
+                tokens=int(toks.shape[-1]),
+            )
+            self.trace.instant(
+                "first_token",
+                track=track,
+                ts=ts_admit + dt,
+                rid=req.rid,
+                token=first,
+            )
         if req.max_new == 1 or first == self.ecfg.eos_id:
             self._mark_done(idx, now)
 
@@ -502,23 +700,47 @@ class DecodeEngine:
                 toks[i, 0] = s.next_tok
                 pos[i] = s.next_pos
                 live.append(i)
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, self.state = self._decode(
             self.params, jnp.asarray(toks), jnp.asarray(pos), self.state
         )
-        nxt = np.asarray(jax.block_until_ready(jnp.argmax(logits, -1)))
-        self.stats.t_decode_s += time.time() - t0
-        self.stats.decode_steps += 1
-        self.stats.act_quant_reused = (
+        nxt_arr = jnp.argmax(logits, -1)
+        # fence the FULL output tree (next tokens AND the appended cache
+        # state), so the stamp covers device work, not dispatch latency
+        jax.block_until_ready((nxt_arr, self.state))
+        dt = time.perf_counter() - t0
+        nxt = np.asarray(nxt_arr)
+        m = self.metrics
+        m.counter("engine.t_decode_s").inc(dt)
+        m.counter("engine.decode_steps").inc()
+        m.counter("engine.slot_steps").inc(len(live))
+        m.counter("engine.padded_slot_steps").inc(len(self._occupied()))
+        m.gauge("engine.act_quant_reused").set(
             getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
         )
-        self.stats.slot_steps += len(live)
-        self.stats.padded_slot_steps += len(self._occupied())
+        m.histogram("engine.decode_step_ms").observe(dt * 1e3)
+        ts1 = self.trace.now() if self.trace is not None else time.perf_counter()
+        if self.trace is not None:
+            self.trace.span(
+                "decode_step", ts1 - dt, ts1, slots=len(live), iteration=now
+            )
+        itl = m.histogram("engine.itl_ms")
         for i in live:
             s = self.slots[i]
             s.gen.append(int(nxt[i]))
             s.next_tok = int(nxt[i])
             s.next_pos += 1
+            itl.observe((ts1 - s.ts_last_token) * 1e3)
+            s.ts_last_token = ts1
+            if self.trace is not None:
+                self.trace.instant(
+                    "token",
+                    track=obs_trace.req_track(s.req.rid),
+                    ts=ts1,
+                    rid=s.req.rid,
+                    token=int(nxt[i]),
+                    iteration=now,
+                )
             if len(s.gen) >= s.req.max_new or nxt[i] == self.ecfg.eos_id:
                 self._mark_done(i, now)
 
@@ -542,7 +764,7 @@ class DecodeEngine:
             pass  # held round finished at admission: released next tick
         elif not self.scheduler.has_pending():
             return False
-        self.stats.iterations += 1
+        self.metrics.counter("engine.iterations").inc()
         return True
 
     def run(self) -> Dict[int, Completion]:

@@ -81,13 +81,26 @@ class Completion:
 class Scheduler:
     """Admission policy over a request queue (see module docstring)."""
 
-    def __init__(self, policy: str = "continuous", prefill_chunk: int = 128):
+    def __init__(
+        self,
+        policy: str = "continuous",
+        prefill_chunk: int = 128,
+        metrics=None,
+    ):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
         self.policy = policy
         self.prefill_chunk = int(prefill_chunk)
         self.pending: List[Request] = []
         self._credit = 0
+        # optional repro.obs.metrics.MetricsRegistry shared with the engine
+        # (queue depth / banked prefill credit gauges, admission counter)
+        self.metrics = metrics
+
+    def _observe(self) -> None:
+        if self.metrics is not None:
+            self.metrics.gauge("scheduler.queue_depth").set(len(self.pending))
+            self.metrics.gauge("scheduler.prefill_credit").set(self._credit)
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -97,6 +110,7 @@ class Scheduler:
             # is pending, so it cannot clear this itself)
             self._credit = 0
         self.pending.append(req)
+        self._observe()
 
     def has_pending(self) -> bool:
         return bool(self.pending)
@@ -123,6 +137,9 @@ class Scheduler:
                 return []
             picks = self._arrived(now)[: len(free_slots)]
             self._drop(picks)
+            if self.metrics is not None and picks:
+                self.metrics.counter("scheduler.admitted").inc(len(picks))
+            self._observe()
             return list(zip(picks, free_slots))
 
         # continuous: accrue prefill credit only while work is waiting
@@ -139,6 +156,9 @@ class Scheduler:
             self._credit -= r.prompt_len
             out.append((r, free.pop(0)))
         self._drop([r for r, _ in out])
+        if self.metrics is not None and out:
+            self.metrics.counter("scheduler.admitted").inc(len(out))
+        self._observe()
         return out
 
     def _drop(self, picks: List[Request]) -> None:

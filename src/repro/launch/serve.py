@@ -96,14 +96,81 @@ def run_engine(params, cfg, bits, ctx, reqs, *, schedule, slots, cache_len,
 
 
 def print_stats(label, eng):
+    """THE stats report: one table per serving epoch, rendered straight
+    from the ``EngineStats.as_dict()`` snapshot (counters, timers and the
+    TTFT / inter-token latency percentiles all come from the same metrics
+    registry — no ad-hoc side channels)."""
     s = eng.stats
+    d = s.as_dict()
     print(
-        f"{label}: {s.completed} done | prefill {s.prefill_tokens} tok "
-        f"{s.t_prefill_s * 1e3:.0f} ms | decode {s.decode_steps} steps "
-        f"({s.slot_steps} slot-steps) {s.t_decode_s * 1e3:.0f} ms "
+        f"{label}: {s.completed} done | decode {s.decode_steps} steps "
         f"({s.decode_tokens_per_s:.0f} tok/s) | "
         f"prefill chunk {eng.prefill_chunk}"
     )
+    width = max(len(k) for k in d)
+    for k in sorted(d):
+        v = d[k]
+        num = f"{v:.3f}" if isinstance(v, float) else str(v)
+        print(f"  {k:<{width}}  {num}")
+
+
+def export_obs(args, eng):
+    """``--trace-out`` / ``--metrics-out`` artifacts from one engine epoch
+    (call before a ``reset()`` starts the next epoch)."""
+    import os
+
+    def ensure_dir(path):
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+
+    if getattr(args, "trace_out", None):
+        if eng.trace is None:
+            raise SystemExit("--trace-out: engine tracing is disabled")
+        ensure_dir(args.trace_out)
+        eng.trace.write(args.trace_out)
+        print(f"trace: {len(eng.trace.events)} events -> {args.trace_out}")
+    if getattr(args, "metrics_out", None):
+        import json
+        ensure_dir(args.metrics_out)
+        with open(args.metrics_out, "w") as f:
+            json.dump(eng.metrics.snapshot(), f, indent=1, sort_keys=True)
+        print(f"metrics: {len(eng.metrics)} series -> {args.metrics_out}")
+
+
+def check_trace(eng, label):
+    """Smoke gate: the recorded lifecycle trace and the stats counters must
+    describe the same run (``repro.obs.trace.reconcile``)."""
+    from repro.obs import trace as obs_trace
+    if eng.trace is None:
+        return
+    problems = obs_trace.reconcile(eng.trace, eng.stats.as_dict())
+    if problems:
+        raise SystemExit(f"{label}: trace/stats reconcile failed: "
+                         + "; ".join(problems))
+    print(f"{label}: trace reconciles with engine stats "
+          f"({len(eng.trace.events)} events)")
+
+
+def calibration_report(eng, cfg, *, gate=False):
+    """Replay the epoch's measured phase timings against the roofline
+    step-cost model the engine budgeted with (``repro.obs.calibrate``)."""
+    from repro.obs import calibrate
+    report = calibrate.calibrate(
+        cfg, eng.stats.as_dict(), slots=eng.ecfg.slots,
+        cache_tokens=eng.ecfg.cache_len, kv_bits=eng.kv_bits,
+        kv_attend=eng.kv_attend,
+        w_bits_total=getattr(eng.adapter, "w_bits_total", None),
+        chip=eng.ecfg.chip)
+    print("roofline calibration (measured vs modeled):")
+    print(calibrate.render_table(report["rows"]))
+    t = report["device_table"]
+    print(f"  measured device table: hbm_bytes_s={t['hbm_bytes_s']:.3e} "
+          f"peak_flops={t['peak_flops']:.3e} ({t['name']})")
+    if gate and not report["finite"]:
+        raise SystemExit("roofline calibration produced a non-finite or "
+                         f"non-positive ratio: {report['rows']}")
+    return report
 
 
 def demo_mixed_policy(cfg, meta=None):
@@ -171,16 +238,20 @@ def serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes=NO_AXES):
                        adapter=sess)
     eng.submit_all(reqs)
     completions = eng.run()
+    # counters (prefill shapes compiled, act quantizes reused, routes, ...)
+    # all live in the stats table now — only the HBM accounting, which is
+    # session- not engine-scoped, keeps its own line
     print_stats(f"quantized/{args.schedule}", eng)
+    export_obs(args, eng)
+    if args.smoke:
+        check_trace(eng, "quantized")
+        calibration_report(eng, cfg, gate=True)
     s = summarize(sess)
     print(f"packed weights: {s['packed_bytes']} B "
           f"(+{s['scale_bytes']} B scales) vs policy accounting "
           f"{s['policy_bytes']:.0f} B (x{s['packed_vs_policy']:.3f}) | "
           f"{s['compression_vs_fp32']:.2f}x smaller than fp32 | "
-          f"kv={s['kv_quant']} decode-attn={eng.decode_attn_route} | "
-          f"prefill shapes compiled: "
-          f"{eng.stats.prefill_compiles} | act quantizes reused: "
-          f"{eng.stats.act_quant_reused}")
+          f"kv={s['kv_quant']} decode-attn={eng.decode_attn_route}")
     if axes.enabled and axes.tp_size > 1:
         ideal = policy.size_bytes(sess.qlayers, per_shard=axes.tp_size)
         # the gate budget follows the session's actual shard plan: a
@@ -276,6 +347,12 @@ def main(argv=None):
                          "xla_force_host_platform_device_count=8)")
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable prompt-length bucketing (--policy path)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request-lifecycle trace of the measured "
+                         "run: .jsonl = one event per line, anything else = "
+                         "Chrome trace JSON (chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the engine metrics-registry snapshot (json)")
     ap.add_argument("--write-demo-policy", default=None, metavar="PATH",
                     help="write a mixed demo MPQPolicy json and exit")
     ap.add_argument("--uniform-bits", type=int, default=4)
@@ -352,6 +429,12 @@ def main(argv=None):
                                   cache_len=cache_len, eng=eng, axes=axes)
     cont_stats = eng.stats      # reset() below replaces, not mutates, this
     print_stats(args.schedule, eng)
+    # obs artifacts + gates come from THIS measured epoch, before the
+    # --compare reset below starts a fresh registry/trace
+    export_obs(args, eng)
+    if args.smoke:
+        check_trace(eng, args.schedule)
+        calibration_report(eng, cfg, gate=True)
     r0 = completions[0]
     print(f"generated[rid=0] ({r0.prompt_len}-token prompt):", r0.tokens)
 

@@ -1,0 +1,24 @@
+"""repro.obs — observability for the quantized serving stack.
+
+Three pieces, all zero-dependency (stdlib + the repo only):
+
+* ``obs.metrics``   — a metrics registry (monotonic counters, gauges,
+  fixed-bucket histograms, snapshot-to-dict). The engine, scheduler,
+  session, dispatch and KV cache report through one registry instead of
+  mutating ad-hoc stat fields.
+* ``obs.trace``     — per-request lifecycle event traces
+  (admit → prefill → first-token → decode ticks → complete/evict) with
+  fenced ``time.perf_counter`` timestamps, exportable as JSONL or
+  Chrome-trace/Perfetto JSON (``serve --trace-out``).
+* ``obs.calibrate`` — replays measured per-phase engine timings against
+  the ``dist.roofline`` step-cost model and emits a measured-vs-modeled
+  table plus a device-table stanza the ``ChipSpec`` can be updated from
+  (``benchmarks/roofline_calibration.py``).
+"""
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import TraceRecorder  # noqa: F401

@@ -60,6 +60,7 @@ Array = jax.Array
 
 _FORCE: List[Optional[str]] = [None]
 _AXES: List = [None]
+_METRICS: List = [None]
 
 
 @contextlib.contextmanager
@@ -83,6 +84,27 @@ def axes_scope(axes):
         yield
     finally:
         _AXES.pop()
+
+
+@contextlib.contextmanager
+def metrics_scope(registry):
+    """Bind a ``repro.obs.metrics.MetricsRegistry`` for the duration of one
+    traced forward, so dispatch can count which route each packed matmul
+    (``dispatch.route.<impl>``) and the int8 decode attention
+    (``dispatch.decode_attn.<route>``) resolved to. Counts are per *trace*
+    (one compile), like ``act_reuse_scope`` hits — the jitted graph
+    dispatches once, not per executed step. No-op scope under ``None``."""
+    _METRICS.append(registry)
+    try:
+        yield
+    finally:
+        _METRICS.pop()
+
+
+def _count_route(family: str, route: str) -> None:
+    reg = _METRICS[-1]
+    if reg is not None:
+        reg.counter(f"dispatch.{family}.{route}").inc()
 
 
 def _w_contracted_dims(eqn: str):
@@ -133,9 +155,12 @@ def force_decode_attn(name: Optional[str]):
 def resolve_decode_attn(backend: Optional[str] = None) -> str:
     """Route for decode attention over an int8 KV cache (see above)."""
     if _DECODE_ATTN[-1] is not None:
-        return _DECODE_ATTN[-1]
-    backend = backend or jax.default_backend()
-    return "fused" if backend == "tpu" else "dequant-fp"
+        route = _DECODE_ATTN[-1]
+    else:
+        backend = backend or jax.default_backend()
+        route = "fused" if backend == "tpu" else "dequant-fp"
+    _count_route("decode_attn", route)
+    return route
 
 
 # ---------------------------------------------------------------------------
@@ -365,4 +390,5 @@ def packed_qeinsum(eqn: str, x: Array, pl: PackedLinear, ctx,
     of ``quant_layers.qeinsum`` (which routes here when it sees a
     ``PackedLinear`` instead of a fake-quant param dict)."""
     impl = impl or resolve(eqn, pl)
+    _count_route("route", impl)
     return REGISTRY[impl](eqn, x, pl, ctx)

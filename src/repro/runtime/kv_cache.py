@@ -78,14 +78,43 @@ def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
     )
 
 
-def cache_bytes(cache: QuantKVCache) -> int:
-    """Measured HBM bytes of one quantized cache: codes + scales + the
-    int32 position buffer. The ``pos`` rows are part of the resident cache
-    (and of every decode step's attention read — the mask is
+def inventory(cache: QuantKVCache) -> dict:
+    """Resident HBM bytes of one quantized cache, itemized by part:
+    ``codes`` (int8 k+v), ``scales`` (f32 write-time scales) and ``pos``
+    (the int32 position buffer). The ``pos`` rows are part of the resident
+    cache (and of every decode step's attention read — the mask is
     position-driven), so omitting them undercounted measured HBM vs what
-    the roofline's ``decode_step_cost(kv_bits<=8)`` models; both now use
-    this same inventory."""
+    the roofline's ``decode_step_cost(kv_bits<=8)`` models; both use this
+    same inventory, and the engine exports it as ``engine.kv_*_bytes``
+    gauges."""
     import numpy as np
-    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-               for a in (cache.k, cache.v, cache.k_scale, cache.v_scale,
-                         cache.pos))
+
+    def nbytes(*arrs: Array) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrs)
+
+    return {"codes": nbytes(cache.k, cache.v),
+            "scales": nbytes(cache.k_scale, cache.v_scale),
+            "pos": nbytes(cache.pos)}
+
+
+def cache_bytes(cache: QuantKVCache) -> int:
+    """Measured HBM bytes of one quantized cache (sum of its
+    :func:`inventory`)."""
+    return sum(inventory(cache).values())
+
+
+def tree_inventory(state) -> dict:
+    """Itemized :func:`inventory` summed over every ``QuantKVCache`` leaf
+    of an engine state tree (zeros when the state holds fp caches)."""
+    total = {"codes": 0, "scales": 0, "pos": 0}
+    for leaf in jax.tree.leaves(
+            state, is_leaf=lambda x: isinstance(x, QuantKVCache)):
+        if isinstance(leaf, QuantKVCache):
+            for part, n in inventory(leaf).items():
+                total[part] += n
+    return total
+
+
+def tree_cache_bytes(state) -> int:
+    """Total quantized-cache HBM bytes of an engine state tree."""
+    return sum(tree_inventory(state).values())

@@ -130,6 +130,10 @@ class QuantizedSession:
         self.sites = lm.iter_sites(cfg)
         self._lut = {int(b): i for i, b in enumerate(cfg.bits)}
         self.act_quant_reused = 0      # trace-time hits, see dispatch
+        # obs.metrics.MetricsRegistry shared by the engine (it assigns this
+        # at build/reset): _forward binds it so dispatch counts the routes
+        # each packed matmul resolves to, per trace
+        self.metrics = None
         # Off-TPU, the model axis is a STORAGE axis only: packed codes
         # shard over tp in HBM and gather at use (dispatch docstring), but
         # the layer graph keeps no model-sharded intermediates — compute
@@ -266,6 +270,7 @@ class QuantizedSession:
 
         new_states = {"sites": {}}
         with dispatch.axes_scope(self.axes), \
+                dispatch.metrics_scope(self.metrics), \
                 dispatch.act_reuse_scope() as scope:
             for site in self.sites:
                 key = _site_key(site.gidx)
@@ -277,6 +282,8 @@ class QuantizedSession:
                 new_states["sites"][key] = st
         # trace-time count: quantize ops elided from this compiled graph
         self.act_quant_reused += scope["hits"]
+        if self.metrics is not None and scope["hits"]:
+            self.metrics.counter("dispatch.act_reuse_hits").inc(scope["hits"])
         return x, new_states
 
     def prefill(self, params, inputs, *, prefill_cap, true_len=None):
