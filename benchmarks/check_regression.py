@@ -64,6 +64,12 @@ GATED_QUANT = {
     # per-step decode-attention cache traffic of the fused int8 route
     # (codes + scales + pos): growing = the cache inventory regressed
     "decode_attn_hbm_bytes": +1,
+    # the paged-KV shared-prefix preset: FLOPs avoided by page-table hits
+    # shrinking = prefix reuse regressed; compile shapes growing = chunked
+    # append re-grew a per-prompt-length recompile
+    "prefill_flops_saved": -1,
+    "shared_prefix_prefill_compiles": +1,
+    "shared_prefix_prefill_tokens": +1,
 }
 INFO_QUANT = (
     "packed_tok_per_s",
@@ -71,6 +77,7 @@ INFO_QUANT = (
     "hbm_bytes_saved_per_step",
     "sharded_per_shard_bytes",
     "decode_attn_model_vs_measured",
+    "shared_prefix_unique_pages",
     # request-latency percentiles + roofline calibration ratios from the
     # obs metrics registry: wall-clock / host-dependent, never gated
     "ttft_p50_ms",
@@ -84,10 +91,13 @@ IDENTITY_FLAGS = {
     "serve": ("token_identical",),
     # decode_attn_bytes_match: the roofline's kv_hbm_bytes must stay
     # within 5% of the fused route's measured cache traffic
+    # shared_prefix_token_identical: the paged layout must generate the
+    # ring layout's exact greedy tokens on both decode-attention routes
     "quant": (
         "token_identical",
         "sharded_token_identical",
         "decode_attn_bytes_match",
+        "shared_prefix_token_identical",
     ),
 }
 

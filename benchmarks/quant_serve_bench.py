@@ -61,6 +61,69 @@ def bench_preset(fast: bool = True):
                 n_requests=n_req, arrive_every=1)
 
 
+def shared_prefix_preset(fast: bool = True):
+    """The shared-system-prompt workload the paged KV layout wins on:
+    every prompt opens with the same ``prompt_len // 2`` tokens (a full
+    page), so the paged engine re-maps those pages instead of
+    re-prefilling them."""
+    return dict(requests=4 if fast else 8, slots=2, prompt_len=16, gen=4,
+                page_size=8)
+
+
+def _shared_prefix_counters(cfg, params, ctx, policy, fast: bool) -> dict:
+    """Serve one shared-prefix request set through {ring, paged} x
+    {fused-interpret, dequant-fp} engines over ONE packed session.  Gated:
+    greedy tokens bitwise-identical between the layouts on both routes,
+    paged saves >0 prefill FLOPs via page-table hits, and chunked-append
+    prefill compiles exactly one shape (no prompt-length bucketing)."""
+    from repro.launch.serve import ServeConfig
+    from repro.runtime import dispatch
+
+    sp = shared_prefix_preset(fast)
+    scfg = ServeConfig(arch=cfg.name, requests=sp["requests"],
+                       slots=sp["slots"], prompt_len=sp["prompt_len"],
+                       gen=sp["gen"], stagger=True, arrive_every=1,
+                       kv_layout="paged", page_size=sp["page_size"])
+    data = SyntheticLM(cfg)
+    reqs = build_requests(data, scfg.requests, scfg.prompt_len, scfg.gen,
+                          stagger=scfg.stagger,
+                          arrive_every=scfg.arrive_every,
+                          share_prefix=scfg.prompt_len // 2)
+    sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+                            kv_quant="int8")
+    identical = True
+    saved = None
+    paged = {}
+    for route in ("fused-interpret", "dequant-fp"):
+        toks = {}
+        for layout in ("ring", "paged"):
+            with dispatch.force_decode_attn(route):
+                eng = DecodeEngine(
+                    sess.params, cfg, None, ctx, NO_AXES,
+                    scfg.engine_config(layout=layout), adapter=sess)
+                eng.submit_all(reqs)
+                out = eng.run()
+            toks[layout] = {r.rid: out[r.rid].tokens for r in reqs}
+            st = eng.stats.as_dict()
+            if layout == "paged":
+                eng.pool.check()
+                saved = st["prefill_flops_saved"]
+                paged.update(prefill_tokens=st["prefill_tokens"],
+                             prefill_compiles=st["prefill_compiles"],
+                             unique_pages=st["kv_unique_pages"])
+            else:
+                paged["ring_prefill_tokens"] = st["prefill_tokens"]
+        identical &= toks["paged"] == toks["ring"]
+    return {
+        "shared_prefix_token_identical": bool(identical),
+        "prefill_flops_saved": float(saved),
+        "shared_prefix_prefill_compiles": paged["prefill_compiles"],
+        "shared_prefix_prefill_tokens": paged["prefill_tokens"],
+        "shared_prefix_ring_prefill_tokens": paged["ring_prefill_tokens"],
+        "shared_prefix_unique_pages": paged["unique_pages"],
+    }
+
+
 def _mixed_policy(cfg):
     # the same builder the serve --policy smoke uses: the checked-in
     # baseline pins this exact bit assignment
@@ -191,6 +254,7 @@ def run(fast: bool = True):
                                         tp_size=4),
     }
     sharded = _sharded_counters(p)
+    shared_prefix = _shared_prefix_counters(cfg, params, ctx, policy, fast)
     pstats = results["packed"]["stats"]
     # measured-vs-modeled phase ratios from the packed engine's (warmed)
     # measured epoch — the roofline calibration loop, ungated in CI: the
@@ -241,6 +305,7 @@ def run(fast: bool = True):
             r["phase"]: r["ratio"] for r in calib["rows"]},
     }
     out.update(sharded)
+    out.update(shared_prefix)
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(BENCH_PATH, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
@@ -262,7 +327,20 @@ def run(fast: bool = True):
           f"serve: tokens_identical={sharded['sharded_token_identical']} "
           f"per-shard x{sharded['sharded_per_shard_vs_policy']:.3f} of "
           f"budget on tp={sharded['sharded_tp_size']}")
+    print(f"  shared-prefix preset: tokens_identical="
+          f"{shared_prefix['shared_prefix_token_identical']} | paged saved "
+          f"{shared_prefix['prefill_flops_saved']:.2e} prefill FLOPs "
+          f"({shared_prefix['shared_prefix_prefill_tokens']} prefill tokens "
+          f"vs ring {shared_prefix['shared_prefix_ring_prefill_tokens']}) | "
+          f"{shared_prefix['shared_prefix_prefill_compiles']} compile "
+          f"shape(s)")
     print(f"  -> {BENCH_PATH}")
+    assert shared_prefix["shared_prefix_token_identical"], \
+        "paged layout diverged from the ring layout on a shared prefix"
+    assert shared_prefix["prefill_flops_saved"] > 0, \
+        "shared-prefix preset saved no prefill FLOPs (prefix reuse broken)"
+    assert shared_prefix["shared_prefix_prefill_compiles"] == 1, \
+        "paged chunked-append prefill compiled more than one shape"
     assert identical, "packed runtime diverged from the fake-quant reference"
     assert abs(info["packed_vs_policy"] - 1.0) <= 0.05, \
         "packed HBM bytes off the policy accounting by more than 5%"

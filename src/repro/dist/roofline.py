@@ -93,6 +93,8 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
                      kv_bits: float = 16.0,
                      kv_attend: str = "fused",
                      w_bits_total: Optional[float] = None,
+                     unique_pages: Optional[int] = None,
+                     page_size: int = 0,
                      chip: ChipSpec = DEFAULT_CHIP) -> dict:
     """Analytic three-term roofline for ONE continuous-batching decode step.
 
@@ -127,12 +129,28 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
       is what the engine actually pays off-TPU, so ``suggest_prefill_chunk``
       budgets honestly instead of assuming the kernel route.
 
+    ``unique_pages`` + ``page_size`` switch the KV term to the paged
+    layout's accounting: shared-prefix pages are physically one allocation,
+    so a step touches ``unique_pages * page_size`` cache rows instead of
+    ``cache_tokens`` rows per slot — prefix sharing shrinks the modeled KV
+    traffic, not just prefill compute. The paged layout also charges the
+    int32 slot -> page-list table (read every step to gather, unsharded
+    like the pos rows). The pool's host-side free-list/refcount arrays are
+    deliberately NOT charged here — they never move over HBM during a
+    decode step (``kv_cache.inventory`` does count them, under ``meta``).
+
     Returns the three terms plus ``step_s``/``dominant`` and the raw
     ``hbm_bytes``/``kv_hbm_bytes``/``wire_bytes`` counters.
     """
     if kv_attend not in ("fused", "dequant"):
         raise ValueError(f"kv_attend must be 'fused' or 'dequant', "
                          f"got {kv_attend!r}")
+    paged = unique_pages is not None
+    if paged and page_size <= 0:
+        raise ValueError("paged KV accounting needs page_size > 0")
+    if paged and kv_bits > 8:
+        raise ValueError("paged KV pages hold int8 codes: kv_bits must be "
+                         f"<= 8, got {kv_bits}")
     from repro.models import lm   # local import: lm imports dist.axes
     qlayers = lm.enumerate_qlayers(cfg)
     macs = sum(q.macs_per_token * q.n_mats for q in qlayers)
@@ -151,22 +169,30 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
         w_bytes = (w_bits_total / 8.0) / tp
     else:
         w_bytes = w_params * (avg_weight_bits / 8.0) / tp
-    kv_elems = 2.0 * kv_rows * n_slots * cfg.kv_dim * n_kv_layers
+    # rows of cache a step actually touches: dense per-slot rows for the
+    # ring layout; the pool's unique resident rows for the paged layout
+    # (a prefix page shared by k slots is one physical read, not k)
+    eff_rows = (unique_pages * page_size if paged
+                else float(kv_rows) * n_slots)
+    kv_elems = 2.0 * eff_rows * cfg.kv_dim * n_kv_layers
     kv_bytes = kv_elems * (kv_bits / 8.0) / tp
     if kv_bits <= 8:
         # int8 KV: per-row per-head f32 scales and the int32 per-slot
         # position row ride along with the codes (one pos buffer serves
         # both k and v) — matching runtime.kv_cache.cache_bytes
         n_heads_kv = max(cfg.kv_dim // max(cfg.hd, 1), 1)
-        kv_bytes += (2.0 * kv_rows * n_slots * n_heads_kv
-                     * n_kv_layers * 4.0 / tp)
+        kv_bytes += 2.0 * eff_rows * n_heads_kv * n_kv_layers * 4.0 / tp
         # the pos row has no KV-head dim to split over tp: every model
         # shard reads the full position inventory to mask its attention
-        kv_bytes += kv_rows * n_slots * n_kv_layers * 4.0
+        kv_bytes += eff_rows * n_kv_layers * 4.0
         if kv_attend == "dequant":
             # int8 stored but fp-attended: the fallback materializes the
             # dequantized cache in HBM each step (bf16 write + read)
             kv_bytes += 2.0 * kv_elems * 2.0 / tp
+    if paged:
+        # int32 slot -> page-list indirection, gathered every step
+        pages_per_slot = -(-max(kv_rows, 1) // page_size)
+        kv_bytes += n_slots * pages_per_slot * n_kv_layers * 4.0
     memory_s = (w_bytes + kv_bytes) / chip.hbm_bytes_s
     wire = (2.0 * 2 * cfg.n_layers * n_slots * cfg.d_model
             * 2 * (tp_size - 1) / max(tp_size, 1)) if tp_size > 1 else 0.0

@@ -95,6 +95,20 @@ def decode_attn_quant(q, k_codes, k_scale, v_codes, v_scale, pos_arr, q_pos,
                                  interpret=interpret)
 
 
+def decode_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale, page_pos,
+                            page_table, q_pos, *, window=None,
+                            interpret=None):
+    """One-token decode attention over the paged int8 KV layout: the page
+    table rides in as a scalar-prefetch operand and blocks gather by page
+    index (see ``kernels.quant_attention.decode_attn_quant_paged``)."""
+    from repro.kernels import quant_attention as _qa
+    if interpret is None:
+        interpret = _interpret_default()
+    return _qa.decode_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale,
+                                       page_pos, page_table, q_pos,
+                                       window=window, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # rwkv wkv
 # ---------------------------------------------------------------------------

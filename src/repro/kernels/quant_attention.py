@@ -162,3 +162,132 @@ def decode_attn_quant(q, k_codes, k_scale, v_codes, v_scale, pos_arr, q_pos,
     )(qf, kf, ks, vf, vs, pos2, qp)
 
     return out.reshape(B, KV, G, hd).reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: gather-by-page-index via scalar-prefetched page table
+# ---------------------------------------------------------------------------
+def _qdec_paged_kernel(tbl_ref, qp_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                       pos_ref, o_ref, m_ref, l_ref, acc_ref, *, n_blocks,
+                       kv_heads, window):
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+    b = p // kv_heads
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (G, hd) f32, pre-scaled
+    kc = k_ref[0, 0].astype(jnp.float32)           # (ps, hd) from int8 codes
+    ks = ks_ref[0, 0]                              # (ps,) f32 row scales
+    kpos = pos_ref[0]                              # (ps,) int32 abs position
+    qp = qp_ref[b]                                 # scalar int32 query pos
+
+    logits = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = logits * ks[None, :]
+    # an unmapped table entry (-1) aliased to physical page 0 by the index
+    # map's clip — mask the whole block so it contributes exact zeros
+    valid = (tbl_ref[b, j] >= 0) & (kpos >= 0) & (kpos <= qp)
+    if window is not None:
+        valid &= qp - kpos < window
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[None, :]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p_blk = jnp.exp(logits - m_new[:, None])       # (G, ps)
+    l_ref[...] = l_ref[...] * alpha + p_blk.sum(axis=-1)
+    pv = jax.lax.dot_general(p_blk * vs_ref[0, 0][None, :],
+                             v_ref[0, 0].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale, page_pos,
+                            page_table, q_pos, *, window: Optional[int] = None,
+                            interpret: bool = False):
+    """One-token decode attention over the paged int8 KV layout.
+
+    Same online-softmax body as :func:`decode_attn_quant`, but the kv grid
+    dimension walks each slot's *page list* instead of a dense ring: the
+    page table and query positions ride in as scalar-prefetch operands
+    (``pltpu.PrefetchScalarGridSpec``), and the K/V/scale/pos block index
+    maps read ``page_table[slot, j]`` to point block ``j`` at its physical
+    page — the gather happens in the block fetch, and HBM never holds a
+    densely gathered per-slot cache.
+
+    q: (B, 1, H, hd) fp queries; k/v_pages: (n_pages, ps, KV, hd) int8;
+    k/v_scale: (n_pages, ps, KV) f32; page_pos: (n_pages, ps) int32
+    absolute positions (-1 = empty row); page_table: (B, P) int32 physical
+    page per logical block (-1 = unmapped: its block masks out entirely);
+    q_pos: (B,) int32. Returns (B, 1, H, hd) f32.
+    """
+    n_pages, ps, KV, hd = k_pages.shape
+    B, P = page_table.shape
+    H = q.shape[2]
+    G = H // KV
+    assert H == KV * G and q.shape[1] == 1, (q.shape, k_pages.shape)
+
+    qf = (q.reshape(B, KV, G, hd).astype(jnp.float32) * (hd ** -0.5))
+    qf = qf.reshape(B * KV, G, hd)
+    kf = k_pages.transpose(0, 2, 1, 3)             # (n_pages, KV, ps, hd)
+    vf = v_pages.transpose(0, 2, 1, 3)
+    ks = k_scale.transpose(0, 2, 1).astype(jnp.float32)   # (n_pages, KV, ps)
+    vs = v_scale.transpose(0, 2, 1).astype(jnp.float32)
+    tbl = jnp.asarray(page_table, jnp.int32)
+    qp = jnp.asarray(q_pos, jnp.int32)
+    pos = jnp.asarray(page_pos, jnp.int32)
+
+    def page_of(p, j, tbl_ref):
+        # clip unmapped (-1) to physical page 0; the kernel masks the block
+        return jnp.maximum(tbl_ref[p // KV, j], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, P),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda p, j, tbl, qp: (p, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda p, j, tbl, qp: (page_of(p, j, tbl),
+                                                p % KV, 0, 0)),
+            pl.BlockSpec((1, 1, ps),
+                         lambda p, j, tbl, qp: (page_of(p, j, tbl),
+                                                p % KV, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda p, j, tbl, qp: (page_of(p, j, tbl),
+                                                p % KV, 0, 0)),
+            pl.BlockSpec((1, 1, ps),
+                         lambda p, j, tbl, qp: (page_of(p, j, tbl),
+                                                p % KV, 0)),
+            pl.BlockSpec((1, ps),
+                         lambda p, j, tbl, qp: (page_of(p, j, tbl), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda p, j, tbl, qp: (p, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_qdec_paged_kernel, n_blocks=P, kv_heads=KV,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl, qp, qf, kf, ks, vf, vs, pos)
+
+    return out.reshape(B, KV, G, hd).reshape(B, 1, H, hd)

@@ -89,9 +89,11 @@ from repro.launch.scheduler import (
     Request,
     Scheduler,
     bucket_length,
+    prefix_chain_keys,
 )
 from repro.models import attention as attn
 from repro.models import lm
+from repro.runtime import kv_cache as qkv
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
@@ -109,6 +111,8 @@ class EngineConfig:
     max_iters: int = 100_000  # hard stop for the host loop
     chip: roofline.ChipSpec = roofline.DEFAULT_CHIP
     kv_quant: str = "none"  # "none" | "int8" | "fake" (reference numerics)
+    kv_layout: str = "ring"  # "ring" | "paged" (pooled pages + prefix reuse)
+    page_size: int = 8  # tokens per KV page (paged layout only)
     bucket_prompts: bool = False  # pow-2 prompt padding to bound re-jits
     bucket_min: int = 8  # smallest prompt bucket
     trace: bool = True  # record the per-request lifecycle event trace
@@ -137,6 +141,8 @@ class EngineStats:
     admitted: int = 0
     completed: int = 0
     tokens_generated: int = 0
+    prefill_flops_saved: float = 0.0  # MACs*2 skipped via shared-prefix pages
+    kv_unique_pages: int = 0  # paged layout: distinct physical pages mapped
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
     latency: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -270,6 +276,47 @@ class DecodeEngine:
         self.adapter = adapter
 
         kv_mode = getattr(adapter, "kv_quant", self.ecfg.kv_quant)
+        from repro.runtime import dispatch as _dispatch
+
+        _dispatch.ROUTES.validate("kv_layout", self.ecfg.kv_layout)
+        self._paged = self.ecfg.kv_layout == "paged"
+        self.layout: Optional[qkv.KVCacheLayout] = None
+        self.pool: Optional[qkv.PagePool] = None
+        if self._paged:
+            # the paged layout is the packed int8 serving path: pooled int8
+            # pages, a slot -> page-list table, and chunked append prefill
+            if kv_mode != "int8":
+                raise ValueError(
+                    f"kv_layout='paged' requires int8 KV (got {kv_mode!r}):"
+                    " pages hold codes + scales"
+                )
+            if not hasattr(adapter, "append"):
+                raise ValueError(
+                    "kv_layout='paged' needs an append-capable adapter "
+                    "(QuantizedSession); the fake-quant LMAdapter serves "
+                    "through the ring layout"
+                )
+            if cfg.sliding_window or cfg.local_window:
+                raise ValueError(
+                    "kv_layout='paged' does not support sliding-window "
+                    "archs: a window evicts mid-page, breaking page sharing"
+                )
+            if axes.enabled:
+                raise ValueError(
+                    "kv_layout='paged' is single-device for now: the page "
+                    "pool id space is not mesh-sharded"
+                )
+            self.layout = qkv.KVCacheLayout(
+                kind="paged", quant="int8", page_size=self.ecfg.page_size
+            )
+            self._pages_per_slot = self.layout.pages_per_slot(
+                self.ecfg.cache_len
+            )
+            # FLOPs one prompt token costs across every quantized matmul —
+            # what a shared-prefix page-table hit avoids recomputing
+            self._flops_per_token = 2.0 * sum(
+                q.macs_per_token * q.n_mats for q in lm.enumerate_qlayers(cfg)
+            )
         kv_bits = (
             8.0
             if kv_mode == "int8"
@@ -334,6 +381,10 @@ class DecodeEngine:
         # over them) and sliding-window caches (pads evict real rows), so
         # it only engages for full-attention schedules
         self._bucket = bool(self.ecfg.bucket_prompts)
+        if self._paged:
+            # chunked-append prefill already bounds compiles to ONE chunk
+            # shape — bucketing would only pad for no benefit
+            self._bucket = False
         if self._bucket:
             kinds = {s.kind for s in lm.iter_sites(cfg)}
             windowed = bool(cfg.sliding_window or cfg.local_window)
@@ -370,6 +421,9 @@ class DecodeEngine:
 
         def evict(state, slot):
             def one(c):
+                if isinstance(c, qkv.PagedKVCache):
+                    return c.evict(slot)  # unmap the table row; the pool
+                    # frees + pos-clears the physical pages host-side
                 if not isinstance(c, attn.CACHE_TYPES):
                     return c
                 axis = c.pos.ndim - 2  # slot axis: 0 plain, 1 body-stacked
@@ -385,11 +439,34 @@ class DecodeEngine:
                 one, state, is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES)
             )
 
+        def _paged_only(fn):
+            def apply(state, *args):
+                return jax.tree.map(
+                    lambda c: fn(c, *args)
+                    if isinstance(c, qkv.PagedKVCache)
+                    else c,
+                    state,
+                    is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES),
+                )
+
+            return apply
+
+        map_slot = _paged_only(lambda c, slot, row: c.map_slot(slot, row))
+        free_pages = _paged_only(lambda c, ids: c.free_pages(ids))
+
+        def append(p, tok, qpos, slot, last_idx, state):
+            return adapter.append(p, tok, qpos, slot, last_idx, state)
+
         if self._mesh is None:
             self._prefill = jax.jit(prefill)
             self._decode = jax.jit(decode, donate_argnums=(3,))
             self._insert = jax.jit(insert, donate_argnums=(0,))
             self._evict = jax.jit(evict, donate_argnums=(0,))
+            self._map_slot = jax.jit(map_slot, donate_argnums=(0,))
+            self._free_pages = jax.jit(free_pages, donate_argnums=(0,))
+            self._append = (
+                jax.jit(append, donate_argnums=(5,)) if self._paged else None
+            )
         else:
             # explicit shardings end-to-end: params enter on their specs,
             # the decode state's slot axis stays pinned over dp across the
@@ -419,6 +496,7 @@ class DecodeEngine:
                 in_shardings=(ss, None),
                 out_shardings=ss,
             )
+            self._map_slot = self._free_pages = self._append = None
 
     # -- observability -------------------------------------------------------
     def _init_obs(self) -> None:
@@ -453,8 +531,6 @@ class DecodeEngine:
     def _set_cache_gauges(self) -> None:
         """Resident KV-cache inventory gauges (int8 caches; fp caches have
         no quantized inventory to itemize)."""
-        from repro.runtime import kv_cache as qkv
-
         inv = qkv.tree_inventory(self.state)
         m = self.metrics
         m.gauge(
@@ -462,6 +538,11 @@ class DecodeEngine:
         ).set(sum(inv.values()))
         for part, nbytes in inv.items():
             m.gauge(f"engine.kv_{part}_bytes").set(nbytes)
+        if self._paged:
+            m.gauge(
+                "engine.kv_unique_pages",
+                help="distinct physical pages currently referenced",
+            ).set(self.pool.unique_pages_in_use)
 
     @property
     def stats(self) -> EngineStats:
@@ -491,6 +572,8 @@ class DecodeEngine:
             admitted=c("admitted"),
             completed=c("completed"),
             tokens_generated=c("tokens_generated"),
+            prefill_flops_saved=m.value("engine.prefill_flops_saved"),
+            kv_unique_pages=c("kv_unique_pages"),
             t_prefill_s=m.value("engine.t_prefill_s"),
             t_decode_s=m.value("engine.t_decode_s"),
             latency=lat,
@@ -498,12 +581,23 @@ class DecodeEngine:
 
     def _fresh_state(self):
         """Allocate the per-slot decode state and, under a mesh, place it
-        on its resolved shardings (computed once, then reused by reset)."""
+        on its resolved shardings (computed once, then reused by reset).
+        The paged layout also rebuilds its host-side page pool here: pool
+        and device state are one consistent unit (empty table, all free)."""
+        self._slot_pages: List[Optional[List[int]]] = [None] * self.ecfg.slots
+        kw = {}
+        if self._paged:
+            self.pool = qkv.PagePool(
+                self.layout.pool_pages(self.ecfg.slots, self.ecfg.cache_len),
+                self.ecfg.page_size,
+            )
+            kw["layout"] = self.layout
         state = self.adapter.init_state(
             self.ecfg.slots,
             self.ecfg.cache_len,
             dtype=self.ecfg.state_dtype,
             per_slot=True,
+            **kw,
         )
         if self._mesh is not None:
             if self._state_shardings is None:
@@ -559,6 +653,17 @@ class DecodeEngine:
             self.submit(r)
 
     # -- internals ----------------------------------------------------------
+    def _clear_freed(self, freed: List[int]) -> None:
+        """Clear device ``pos`` rows of pages whose refcount hit zero.
+        Load-bearing: a recycled page keeping a previous occupant's ``pos``
+        rows would be wrongly attendable the moment it is remapped. Ids are
+        padded to a fixed (n_pages,) shape so this compiles once."""
+        if not freed:
+            return
+        ids = np.full((self.pool.n_pages,), -1, np.int32)
+        ids[: len(freed)] = freed
+        self.state = self._free_pages(self.state, jnp.asarray(ids))
+
     def _occupied(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
@@ -582,6 +687,16 @@ class DecodeEngine:
         self.slots[idx] = None
         m.gauge("engine.slot_occupancy").set(len(self._occupied()))
         self.state = self._evict(self.state, jnp.asarray(idx, jnp.int32))
+        if self._paged:
+            pages = self._slot_pages[idx]
+            self._slot_pages[idx] = None
+            if pages:
+                # drop this slot's references; registry pins keep shared
+                # prefix pages alive for future remaps
+                self._clear_freed(self.pool.release(pages))
+            m.gauge("engine.kv_unique_pages").set(
+                self.pool.unique_pages_in_use
+            )
         if self.trace is not None:
             ts = self.trace.now()
             track = obs_trace.req_track(rid)
@@ -614,7 +729,111 @@ class DecodeEngine:
         if not self.scheduler.hold_round:
             self._finish(idx, now)
 
+    def _admit_paged(self, req: Request, idx: int, now: int) -> None:
+        """Paged admission: longest registered page-aligned prefix becomes
+        a page-table remap (no recompute, attended via COW-refcounted
+        shared pages); only the unshared suffix runs through chunked-append
+        prefill (fixed chunk shape — one compile, no prompt bucketing)."""
+        toks = np.asarray(req.tokens, np.int32)
+        plen = req.prompt_len
+        ps = self.ecfg.page_size
+        pool = self.pool
+        chain = prefix_chain_keys(toks, ps)
+        # cap the hit one page short of covering the whole prompt: at least
+        # one suffix token must run to produce the first token's logits
+        shared = list(pool.lookup_prefix(chain[: (plen - 1) // ps]))
+        hit_tokens = len(shared) * ps
+        fresh, freed = pool.alloc_with_freed(self._pages_per_slot - len(shared))
+        pool.ref(shared)  # this slot's reference on the donor's pages
+        self._clear_freed(freed)
+        table_row = shared + fresh
+        ts_admit = (
+            self.trace.now() if self.trace is not None else time.perf_counter()
+        )
+        t0 = time.perf_counter()
+        self.state = self._map_slot(
+            self.state,
+            jnp.asarray(idx, jnp.int32),
+            jnp.asarray(np.asarray(table_row, np.int32)),
+        )
+        chunk_len = max(ps, self.prefill_chunk // ps * ps)
+        first_arr = None
+        for start in range(hit_tokens, plen, chunk_len):
+            n = min(chunk_len, plen - start)
+            chunk = np.zeros((1, chunk_len), np.int32)
+            chunk[0, :n] = toks[start : start + n]
+            qpos = np.full((chunk_len,), -1, np.int32)
+            qpos[:n] = np.arange(start, start + n, dtype=np.int32)
+            logits, self.state = self._append(
+                self.params,
+                jnp.asarray(chunk),
+                jnp.asarray(qpos),
+                jnp.asarray(idx, jnp.int32),
+                jnp.asarray(n - 1, jnp.int32),
+                self.state,
+            )
+            first_arr = jnp.argmax(logits[0], -1)
+        self._prefill_shapes.add(chunk_len)
+        jax.block_until_ready((first_arr, self.state))
+        dt = time.perf_counter() - t0
+        first = int(first_arr)
+        # register this prompt's own complete-page chains: the next prompt
+        # sharing them prefills only its suffix
+        k_full = plen // ps
+        pool.register_prefix(chain[:k_full], table_row[:k_full])
+        self._slot_pages[idx] = table_row
+        m = self.metrics
+        m.counter("engine.t_prefill_s").inc(dt)
+        m.counter("engine.prefill_calls").inc()
+        m.counter("engine.prefill_tokens").inc(plen - hit_tokens)
+        m.counter("engine.admitted").inc()
+        if hit_tokens:
+            m.counter("engine.prefix_hit_tokens").inc(hit_tokens)
+            m.counter("engine.prefill_flops_saved").inc(
+                hit_tokens * self._flops_per_token
+            )
+        m.gauge("engine.prefill_compiles").set(len(self._prefill_shapes))
+        m.gauge("engine.kv_unique_pages").set(pool.unique_pages_in_use)
+        m.gauge("engine.act_quant_reused").set(
+            getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
+        )
+        m.histogram("engine.prefill_ms").observe(dt * 1e3)
+        m.histogram("engine.ttft_ms").observe(dt * 1e3)
+        self.slots[idx] = _Slot(req, first, now, ts_admit, ts_admit + dt)
+        m.gauge("engine.slot_occupancy").set(len(self._occupied()))
+        if self.trace is not None:
+            track = obs_trace.req_track(req.rid)
+            self.trace.instant(
+                "admit",
+                track=track,
+                ts=ts_admit,
+                rid=req.rid,
+                slot=idx,
+                prompt_len=plen,
+                prefix_hit_tokens=hit_tokens,
+                iteration=now,
+            )
+            self.trace.span(
+                "prefill",
+                ts_admit,
+                ts_admit + dt,
+                track=track,
+                rid=req.rid,
+                tokens=plen - hit_tokens,
+            )
+            self.trace.instant(
+                "first_token",
+                track=track,
+                ts=ts_admit + dt,
+                rid=req.rid,
+                token=first,
+            )
+        if req.max_new == 1 or first == self.ecfg.eos_id:
+            self._mark_done(idx, now)
+
     def _admit(self, req: Request, idx: int, now: int) -> None:
+        if self._paged:
+            return self._admit_paged(req, idx, now)
         toks = np.asarray(req.tokens, np.int32)
         plen = req.prompt_len
         if self._bucket:

@@ -29,6 +29,7 @@ multi-token cache-append kernel.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -51,6 +52,20 @@ def bucket_length(n: int, min_bucket: int = 8) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def prefix_chain_keys(tokens: np.ndarray, page_size: int) -> List[bytes]:
+    """Page-aligned prefix-chain keys for the paged KV cache's shared-prefix
+    registry: key ``j`` (0-based) hashes the first ``(j + 1) * page_size``
+    prompt tokens, for every *complete* page the prompt fills. Two prompts
+    share key ``j`` iff they agree on that whole page-aligned prefix, so
+    the longest key hit names exactly the physical pages that can be
+    re-mapped instead of re-prefilled (``kv_cache.PagePool``)."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    keys: List[bytes] = []
+    for j in range(1, len(toks) // int(page_size) + 1):
+        keys.append(hashlib.sha1(toks[: j * page_size].tobytes()).digest())
+    return keys
 
 
 class Request(NamedTuple):

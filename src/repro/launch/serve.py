@@ -47,9 +47,12 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.core.policy import MPQPolicy
@@ -62,12 +65,103 @@ from repro.models.quant_layers import QuantContext
 from repro.runtime import dispatch
 
 
-def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0):
+@dataclasses.dataclass
+class ServeConfig:
+    """The serving flag pile as one typed, validated object.
+
+    ``main()`` builds it from argparse (``from_args``); tests, benchmarks
+    and ``runtime.sharded_smoke`` build it directly — either way, engine
+    construction consumes ``engine_config()`` instead of re-plumbing loose
+    knobs, so a new serving option lands in every harness at once.
+    Route-shaped fields (``kv_layout``, ``decode_attn``) validate against
+    ``runtime.dispatch.ROUTES`` at construction, not deep in the engine.
+    """
+
+    arch: str = "limpq-demo"
+    requests: int = 8
+    slots: int = 4
+    prompt_len: int = 32
+    gen: int = 16
+    cache_len: int = 0          # 0 = prompt + gen
+    schedule: str = "continuous"
+    stagger: bool = False
+    arrive_every: int = 0
+    policy_path: Optional[str] = None
+    kv: str = "int8"            # int8 | fp: --policy runtime KV storage
+    kv_layout: str = "ring"     # ring | paged (dispatch.ROUTES registry)
+    page_size: int = 8          # tokens per KV page (paged only)
+    decode_attn: str = "auto"   # auto | a dispatch decode_attn route
+    mesh: Optional[str] = None
+    bucket: bool = True         # prompt-length bucketing (ring only)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.schedule not in POLICIES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; known: {POLICIES}")
+        if self.kv not in ("int8", "fp"):
+            raise ValueError(f"kv must be 'int8' or 'fp', got {self.kv!r}")
+        dispatch.ROUTES.validate("kv_layout", self.kv_layout)
+        if self.decode_attn != "auto":
+            dispatch.ROUTES.validate("decode_attn", self.decode_attn)
+        if self.kv_layout == "paged":
+            if self.kv == "fp":
+                raise ValueError(
+                    "--kv-layout paged requires --kv int8: pages hold "
+                    "int8 codes + scales")
+            if self.mesh:
+                raise ValueError(
+                    "--kv-layout paged is single-device for now: the page "
+                    "pool id space is not mesh-sharded")
+
+    @property
+    def resolved_cache_len(self) -> int:
+        return self.cache_len or (self.prompt_len + self.gen)
+
+    @property
+    def session_kv(self) -> str:
+        """KV storage mode for the packed session (``--kv`` normalized)."""
+        return "none" if self.kv == "fp" else "int8"
+
+    @classmethod
+    def from_args(cls, args) -> "ServeConfig":
+        return cls(
+            arch=args.arch, requests=args.requests, slots=args.slots,
+            prompt_len=args.prompt_len, gen=args.gen,
+            cache_len=args.cache_len, schedule=args.schedule,
+            stagger=args.stagger, arrive_every=args.arrive_every,
+            policy_path=args.policy, kv=args.kv, kv_layout=args.kv_layout,
+            page_size=args.page_size, decode_attn=args.decode_attn,
+            mesh=args.mesh, bucket=not args.no_bucket, seed=args.seed)
+
+    def engine_config(self, *, kv_quant: Optional[str] = None,
+                      schedule: Optional[str] = None,
+                      layout: Optional[str] = None) -> EngineConfig:
+        """An ``EngineConfig`` for one engine of this serving run.
+
+        ``kv_quant`` defaults to the packed session's storage mode; a
+        non-int8 engine (the fp path, the fake-quant reference) silently
+        serves through the ring layout — paged pages hold int8 codes."""
+        kv = self.session_kv if kv_quant is None else kv_quant
+        lay = self.kv_layout if layout is None else layout
+        if kv != "int8":
+            lay = "ring"
+        return EngineConfig(
+            slots=self.slots, cache_len=self.resolved_cache_len,
+            policy=schedule or self.schedule, kv_quant=kv, kv_layout=lay,
+            page_size=self.page_size, bucket_prompts=self.bucket)
+
+
+def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0,
+                   share_prefix=0):
     """A deterministic request set from the synthetic corpus. ``stagger``
     varies prompt/generation lengths across requests (the workload shape
     continuous batching wins on); ``arrive_every`` spaces arrivals out by
-    that many engine iterations."""
+    that many engine iterations; ``share_prefix`` overwrites the first that
+    many tokens of every prompt with request 0's (the shared-system-prompt
+    workload the paged KV layout's prefix reuse wins on)."""
     reqs = []
+    base = None
     for i in range(n):
         p = prompt_len
         g = gen
@@ -75,18 +169,24 @@ def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0):
             p = max(4, prompt_len - 3 * (i % 4))
             g = max(2, gen - 2 * (i % 3))
         toks = data.batch(i, 1, p)["tokens"][0]
+        if share_prefix:
+            toks = np.asarray(toks).copy()
+            if base is None:
+                base = toks[:share_prefix].copy()
+            k = min(share_prefix, len(toks))
+            toks[:k] = base[:k]
         reqs.append(
             Request(rid=i, tokens=toks, max_new=g, arrival=i * arrive_every)
         )
     return reqs
 
 
-def run_engine(params, cfg, bits, ctx, reqs, *, schedule, slots, cache_len,
+def run_engine(params, cfg, bits, ctx, reqs, *, scfg: ServeConfig, schedule,
                eng=None, axes=NO_AXES):
     """Run one request set; pass ``eng`` to reuse its compiled functions
     (reset under the new schedule instead of paying a full re-jit)."""
     if eng is None:
-        ecfg = EngineConfig(slots=slots, cache_len=cache_len, policy=schedule)
+        ecfg = scfg.engine_config(kv_quant="none", schedule=schedule)
         eng = DecodeEngine(params, cfg, bits, ctx, axes, ecfg)
     else:
         eng.reset(schedule)
@@ -218,24 +318,24 @@ def resolve_axes(args, cfg):
     return sharding.make_axes_for(cfg, mesh, shard_seq=False), label
 
 
-def serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes=NO_AXES):
+def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
+                    axes=NO_AXES):
     """The ``--policy`` path: pack a searched policy into a
     ``QuantizedSession`` and serve it through the engine. With --smoke,
     gate token identity vs the fake-quant reference graph and packed HBM
     bytes vs the policy's accounting — plus, under a tensor-parallel
     ``--mesh``, per-shard packed bytes vs the per-chip budget
-    ``policy.size_bytes / tp``."""
+    ``policy.size_bytes / tp``. ``--kv-layout paged`` serves the same
+    session over pooled KV pages with shared-prefix remapping; the token
+    gate then proves the paged layout against the ring reference."""
     from repro.runtime.session import QuantizedSession, summarize
 
-    policy = MPQPolicy.load(args.policy)
-    kv = "none" if args.kv == "fp" else "int8"
+    policy = MPQPolicy.load(scfg.policy_path)
+    kv = scfg.session_kv
     sess = QuantizedSession(cfg, params, policy, ctx, axes, mode="packed",
                             kv_quant=kv)
-    ecfg = EngineConfig(slots=args.slots, cache_len=cache_len,
-                        policy=args.schedule, kv_quant=kv,
-                        bucket_prompts=not args.no_bucket)
-    eng = DecodeEngine(sess.params, cfg, None, ctx, axes, ecfg,
-                       adapter=sess)
+    eng = DecodeEngine(sess.params, cfg, None, ctx, axes,
+                       scfg.engine_config(), adapter=sess)
     eng.submit_all(reqs)
     completions = eng.run()
     # counters (prefill shapes compiled, act quantizes reused, routes, ...)
@@ -251,7 +351,14 @@ def serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes=NO_AXES):
           f"(+{s['scale_bytes']} B scales) vs policy accounting "
           f"{s['policy_bytes']:.0f} B (x{s['packed_vs_policy']:.3f}) | "
           f"{s['compression_vs_fp32']:.2f}x smaller than fp32 | "
-          f"kv={s['kv_quant']} decode-attn={eng.decode_attn_route}")
+          f"kv={s['kv_quant']} layout={eng.ecfg.kv_layout} "
+          f"decode-attn={eng.decode_attn_route}")
+    if eng.ecfg.kv_layout == "paged":
+        es = eng.stats
+        print(f"paged KV: {eng.pool.n_pages} pages x "
+              f"{eng.ecfg.page_size} tokens | prefix hits saved "
+              f"{es.prefill_flops_saved:.0f} prefill FLOPs | "
+              f"{es.prefill_compiles} prefill compile shape(s)")
     if axes.enabled and axes.tp_size > 1:
         ideal = policy.size_bytes(sess.qlayers, per_shard=axes.tp_size)
         # the gate budget follows the session's actual shard plan: a
@@ -291,9 +398,8 @@ def serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes=NO_AXES):
         # reference: the fake-quant training graph (scanned body) through
         # the same engine; int8 slots reference as quantize-dequantize fp
         bits = lm.bits_from_policy(cfg, policy)
-        ref_ecfg = EngineConfig(slots=args.slots, cache_len=cache_len,
-                                policy=args.schedule,
-                                kv_quant="fake" if kv == "int8" else "none")
+        ref_ecfg = scfg.engine_config(
+            kv_quant="fake" if kv == "int8" else "none")
         ref = DecodeEngine(params, cfg, bits, ctx, NO_AXES, ref_ecfg)
         ref.submit_all(reqs)
         ref_out = ref.run()
@@ -335,6 +441,14 @@ def main(argv=None):
                          "quantized runtime (repro.runtime.session)")
     ap.add_argument("--kv", default="int8", choices=("int8", "fp"),
                     help="KV-cache storage for the --policy runtime")
+    ap.add_argument("--kv-layout", default="ring",
+                    choices=dispatch.ROUTES.routes("kv_layout"),
+                    help="KV-cache layout for the --policy runtime: ring = "
+                         "per-slot ring buffers; paged = pooled fixed-size "
+                         "pages with COW shared-prefix remapping and "
+                         "chunked-append prefill")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (--kv-layout paged)")
     ap.add_argument("--decode-attn", default="auto",
                     choices=("auto",) + dispatch.DECODE_ATTN_ROUTES,
                     help="decode-attention route over the int8 KV cache: "
@@ -376,30 +490,38 @@ def main(argv=None):
         args.prompt_len = min(args.prompt_len, 16)
         args.gen = min(args.gen, 8)
 
+    try:
+        scfg = ServeConfig.from_args(args)
+    except ValueError as e:
+        raise SystemExit(str(e))
+
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
-    rng = jax.random.PRNGKey(args.seed)
+    rng = jax.random.PRNGKey(scfg.seed)
     params = lm.init_params(rng, cfg)
     ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
                             compute_dtype=jnp.float32)
 
     data = SyntheticLM(cfg)
-    reqs = build_requests(data, args.requests, args.prompt_len, args.gen,
-                          stagger=args.stagger,
-                          arrive_every=args.arrive_every)
-    cache_len = args.cache_len or (args.prompt_len + args.gen)
+    # paged serving: share half the shortest prompt across requests so the
+    # smoke actually exercises prefix remapping, not just the page pool
+    share = (scfg.prompt_len // 2 if scfg.kv_layout == "paged" else 0)
+    reqs = build_requests(data, scfg.requests, scfg.prompt_len, scfg.gen,
+                          stagger=scfg.stagger,
+                          arrive_every=scfg.arrive_every,
+                          share_prefix=share)
 
     axes, mesh_label = resolve_axes(args, cfg)
     if mesh_label:
         print(f"mesh {mesh_label}: dp={axes.dp_size} tp={axes.tp_size}")
 
-    if args.policy:
+    if scfg.policy_path:
         # the force scope must cover engine build AND runs: the route is
         # resolved both at build (roofline accounting) and at trace time
-        forced = None if args.decode_attn == "auto" else args.decode_attn
+        forced = None if scfg.decode_attn == "auto" else scfg.decode_attn
         with dispatch.force_decode_attn(forced):
-            serve_quantized(args, cfg, params, ctx, reqs, cache_len, axes)
+            serve_quantized(args, scfg, cfg, params, ctx, reqs, axes)
         return
 
     if axes.enabled and jax.default_backend() != "tpu":
@@ -421,12 +543,10 @@ def main(argv=None):
     if args.compare and args.schedule != "fixed":
         # warmup pass: pay the jit compiles up front so both measured runs
         # report steady-state throughput (serve_bench does the same)
-        eng, _ = run_engine(params, cfg, bits, ctx, reqs,
-                            schedule=args.schedule, slots=args.slots,
-                            cache_len=cache_len, axes=axes)
-    eng, completions = run_engine(params, cfg, bits, ctx, reqs,
-                                  schedule=args.schedule, slots=args.slots,
-                                  cache_len=cache_len, eng=eng, axes=axes)
+        eng, _ = run_engine(params, cfg, bits, ctx, reqs, scfg=scfg,
+                            schedule=scfg.schedule, axes=axes)
+    eng, completions = run_engine(params, cfg, bits, ctx, reqs, scfg=scfg,
+                                  schedule=scfg.schedule, eng=eng, axes=axes)
     cont_stats = eng.stats      # reset() below replaces, not mutates, this
     print_stats(args.schedule, eng)
     # obs artifacts + gates come from THIS measured epoch, before the
@@ -439,9 +559,8 @@ def main(argv=None):
     print(f"generated[rid=0] ({r0.prompt_len}-token prompt):", r0.tokens)
 
     if args.compare and args.schedule != "fixed":
-        fixed, fixed_out = run_engine(params, cfg, bits, ctx, reqs,
-                                      schedule="fixed", slots=args.slots,
-                                      cache_len=cache_len, eng=eng)
+        fixed, fixed_out = run_engine(params, cfg, bits, ctx, reqs, scfg=scfg,
+                                      schedule="fixed", eng=eng)
         print_stats("fixed", fixed)
         mismatch = [r.rid for r in completions.values()
                     if fixed_out[r.rid].tokens != r.tokens]

@@ -332,42 +332,26 @@ def cross_attention(q: Array, k: Array, v: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# KV cache (decode)
+# KV cache (decode) — layouts live in runtime.kv_cache behind the KVCache
+# protocol (alloc/append/gather/evict/inventory); the names below are the
+# attention-level view plus back-compat delegates for the legacy API.
 # ---------------------------------------------------------------------------
-class KVCache(NamedTuple):
-    """Decode-time ring buffer.
-
-    Two position layouts share this container:
-
-    * shared  — ``pos (Sc,)``: every batch row sits at the same absolute
-      position (the fixed-batch serving path).
-    * per-slot — ``pos (B, Sc)``: each batch row is an independent serving
-      *slot* with its own position/length (the continuous-batching engine).
-      ``decode_attention`` dispatches on ``pos.ndim``.
-    """
-    k: Array      # (B, Sc, KV, hd) — ring buffer when Sc < full context
-    v: Array
-    pos: Array    # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
-
-
-# Both decode-time cache containers: the fp ring buffer and the int8 one
-# (`runtime.kv_cache.QuantKVCache`). Engine/state plumbing that only needs
-# `.pos` and the slot axis treats them uniformly through this tuple.
-CACHE_TYPES = (KVCache, QuantKVCache)
+KVCache = qkv.FpKVCache          # legacy name for the fp ring container
+CACHE_TYPES = qkv.CACHE_TYPES
 
 
 def init_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
                   dtype=jnp.bfloat16, per_slot: bool = False,
-                  quant: bool = False):
-    if quant:
-        return qkv.init_quant_kv_cache(batch, capacity, kv_heads, hd,
-                                       per_slot=per_slot)
-    pos_shape = (batch, capacity) if per_slot else (capacity,)
-    return KVCache(
-        k=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
-        v=jnp.zeros((batch, capacity, kv_heads, hd), dtype),
-        pos=jnp.full(pos_shape, -1, jnp.int32),
-    )
+                  quant: bool = False,
+                  layout: Optional[qkv.KVCacheLayout] = None):
+    """Allocate a decode cache via :class:`runtime.kv_cache.KVCacheLayout`
+    (the one factory all layouts share). ``quant=True`` without an explicit
+    ``layout`` keeps the legacy int8-ring meaning."""
+    if layout is None:
+        layout = qkv.KVCacheLayout(kind="ring",
+                                   quant="int8" if quant else "none")
+    return layout.alloc(batch, capacity, kv_heads, hd, dtype=dtype,
+                        per_slot=per_slot)
 
 
 def build_prefill_cache(k: Array, v: Array, S: int, cap: int,
@@ -402,6 +386,29 @@ def build_prefill_cache(k: Array, v: Array, S: int, cap: int,
     raise ValueError(f"unknown kv_quant mode {kv_quant!r}")
 
 
+def build_prefill_cache_from_codes(kq: Array, ksc: Array, vq: Array,
+                                   vsc: Array, S: int, cap: int):
+    """Like ``build_prefill_cache(..., kv_quant="int8")`` but stores codes +
+    scales the caller already computed (the prefill attend quantizes once
+    and attends the dequantized view; this stores those exact codes rather
+    than re-quantizing the dequantized values, whose re-derived scales
+    could differ by an ulp)."""
+    if cap <= S:
+        sl = slice(S - cap, S)
+        kqs, vqs = kq[:, sl], vq[:, sl]
+        kscs, vscs = ksc[:, sl], vsc[:, sl]
+        pos = jnp.arange(S - cap, S, dtype=jnp.int32)
+    else:
+        pad = cap - S
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        pad3 = ((0, 0), (0, pad), (0, 0))
+        kqs, vqs = jnp.pad(kq, pad4), jnp.pad(vq, pad4)
+        kscs, vscs = jnp.pad(ksc, pad3), jnp.pad(vsc, pad3)
+        pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                               jnp.full((pad,), -1, jnp.int32)])
+    return QuantKVCache(k=kqs, v=vqs, k_scale=kscs, v_scale=vscs, pos=pos)
+
+
 def cache_per_slot(cache):
     """Widen a shared-position KV cache to the per-slot layout.
 
@@ -412,6 +419,8 @@ def cache_per_slot(cache):
     """
     if not isinstance(cache, CACHE_TYPES):
         return cache
+    if isinstance(cache, qkv.PagedKVCache):
+        return cache                     # page table is per-slot already
     if cache.k.ndim == 4 and cache.pos.ndim == 1:
         pos = jnp.broadcast_to(cache.pos[None, :],
                                (cache.k.shape[0],) + cache.pos.shape)
@@ -422,10 +431,6 @@ def cache_per_slot(cache):
     else:
         return cache                     # already per-slot
     return cache._replace(pos=pos)
-
-
-def _row_update(c, n, s):
-    return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
 
 
 def _attend_rows(q: Array, k: Array, v: Array, pos_arr: Array, pos: Array,
@@ -449,35 +454,13 @@ def _attend_rows(q: Array, k: Array, v: Array, pos_arr: Array, pos: Array,
 
 
 def ring_write(cache, k_new: Array, v_new: Array, pos):
-    """Write one decode token row into the ring buffer — the single
-    quantize-and-write sequence shared by all four cache quadrants
-    (fp/int8 x shared/per-slot), so their semantics cannot drift.
-
-    The slot is ``mod(max(pos, 0), cap)`` in every quadrant: a negative
-    sentinel position (an inactive engine slot riding along in the decode
-    batch) clamps to slot 0 and stamps ``pos = -1`` there — never valid to
-    attend — instead of wrapping to ``cap - 1`` and clobbering the ring's
-    tail codes/scales. For an int8 cache the new row quantizes here with
-    its own per-head write-time scale. Returns the updated cache.
-    """
-    cap = cache.k.shape[1]
-    pos = jnp.asarray(pos, jnp.int32)
-    slot = jnp.mod(jnp.maximum(pos, 0), cap)
-    rows = {"k": k_new, "v": v_new}
-    if isinstance(cache, QuantKVCache):
-        rows["k"], rows["k_scale"] = qkv.quantize_rows(k_new)
-        rows["v"], rows["v_scale"] = qkv.quantize_rows(v_new)
-    if cache.pos.ndim == 2:                        # per-slot: pos (B, Sc)
-        upd = {f: jax.vmap(_row_update)(getattr(cache, f), r, slot)
-               for f, r in rows.items()}
-        upd["pos"] = jax.vmap(_row_update)(cache.pos, pos[:, None], slot)
-    else:                                          # shared: pos (Sc,)
-        upd = {f: jax.lax.dynamic_update_slice_in_dim(getattr(cache, f), r,
-                                                      slot, axis=1)
-               for f, r in rows.items()}
-        upd["pos"] = jax.lax.dynamic_update_slice_in_dim(
-            cache.pos, pos[None], slot, axis=0)
-    return cache._replace(**upd)
+    """Write one decode token row into the cache — now one ``append`` path
+    on the :class:`runtime.kv_cache.KVCache` protocol, shared by every
+    layout (fp/int8 ring x shared/per-slot positions, and paged), so their
+    semantics cannot drift. For an int8 cache the new row quantizes inside
+    ``append`` with its own per-head write-time scale. Returns the updated
+    cache."""
+    return cache.append(k_new, v_new, pos)
 
 
 def _attend_quant_fused(q: Array, cache: QuantKVCache, pos: Array,
@@ -496,25 +479,51 @@ def _attend_quant_fused(q: Array, cache: QuantKVCache, pos: Array,
         window=window, interpret=True if route == "fused-interpret" else None)
 
 
+def _attend_paged_fused(q: Array, cache, pos: Array,
+                        window: Optional[int], route: str) -> Array:
+    """Fused decode attention that gathers pages *by index* inside the
+    kernel grid: the page table rides in as a scalar-prefetch operand and
+    the block index map points each kv step at its physical page — no
+    dense (B, cap) gather materializes in HBM."""
+    from repro.kernels import ops
+    return ops.decode_attn_quant_paged(
+        q, cache.k, cache.k_scale, cache.v, cache.v_scale, cache.pos,
+        cache.page_table, pos, window=window,
+        interpret=True if route == "fused-interpret" else None)
+
+
 def decode_attention(q: Array, cache, k_new: Array, v_new: Array,
                      pos, *, window: Optional[int]):
-    """One-token decode: write (k_new, v_new) at slot pos % capacity, then
-    attend over the cache. RoPE is applied before caching, so slot order is
-    irrelevant to the softmax. With a per-slot cache (pos (B, Sc)) ``pos``
-    is a (B,) vector and each row masks independently.
+    """One-token decode: ``cache.append`` the new row, then attend. RoPE is
+    applied before caching, so slot order is irrelevant to the softmax.
+    With a per-slot cache (pos (B, Sc)) ``pos`` is a (B,) vector and each
+    row masks independently.
 
-    An int8 ``QuantKVCache`` stores codes + per-head scales instead of fp
-    rows; the attend step routes through ``runtime.dispatch
-    .resolve_decode_attn`` — the fused Pallas kernel reads the codes
-    directly (TPU, or interpret mode when forced), the dequant-fp fallback
-    rebuilds exact fp rows first (default off-TPU, and the numerics
-    reference the fused route is token-gated against).
+    Int8 layouts (``QuantKVCache`` ring, ``PagedKVCache``) store codes +
+    per-head scales instead of fp rows; the attend step routes through
+    ``runtime.dispatch.resolve_decode_attn`` — the fused Pallas kernel
+    reads the codes directly (TPU, or interpret mode when forced; the
+    paged layout uses the gather-by-page-index kernel variant), the
+    dequant-fp fallback rebuilds exact fp rows first (default off-TPU, and
+    the numerics reference the fused route is token-gated against). The
+    paged dequant path attends over ``gather()``'s dense per-slot view,
+    which reproduces the ring arrays bit-for-bit.
     """
-    quant = isinstance(cache, QuantKVCache)
     out_dtype = v_new.dtype
-    new = ring_write(cache, k_new, v_new, pos)
+    new = cache.append(k_new, v_new, pos)
     pos32 = jnp.asarray(pos, jnp.int32)
-    if quant:
+    if isinstance(new, qkv.PagedKVCache):
+        from repro.runtime import dispatch
+        route = dispatch.resolve_decode_attn()
+        if route != "dequant-fp":
+            out = _attend_paged_fused(q, new, pos32, window, route)
+            return out.astype(out_dtype), new
+        dense = new.gather()
+        k = qkv.dequantize(dense.k, dense.k_scale, k_new.dtype)
+        v = qkv.dequantize(dense.v, dense.v_scale, out_dtype)
+        out = _attend_rows(q, k, v, dense.pos, pos32, window)
+        return out, new
+    if isinstance(new, QuantKVCache):
         from repro.runtime import dispatch
         route = dispatch.resolve_decode_attn()
         if route != "dequant-fp":
@@ -529,4 +538,25 @@ def decode_attention(q: Array, cache, k_new: Array, v_new: Array,
     else:
         out = direct_attention(q, k, v, pos32[None], new.pos, causal=True,
                                window=window)
+    return out, new
+
+
+def append_attention(q: Array, cache, k_new: Array, v_new: Array,
+                     q_pos: Array, slot, *, window: Optional[int]):
+    """Chunked-prefill append for one paged slot: quantize-and-write the
+    chunk's rows into the slot's pages at absolute positions ``q_pos``
+    (-1 pads are dropped), then causally attend the chunk's queries over
+    the slot's dense gathered view. Row values and mask sets match the
+    dense prefill graph exactly (extra unmapped columns carry ``pos = -1``
+    and contribute exact zeros), so a prompt prefilled in chunks decodes
+    token-identically to one prefilled densely.
+    """
+    assert isinstance(cache, qkv.PagedKVCache), type(cache)
+    out_dtype = v_new.dtype
+    new = cache.append_rows(k_new, v_new, q_pos, slot)
+    dense = new.gather_slot(slot)
+    k = qkv.dequantize(dense.k, dense.k_scale, k_new.dtype)
+    v = qkv.dequantize(dense.v, dense.v_scale, out_dtype)
+    out = direct_attention(q, k, v, jnp.asarray(q_pos, jnp.int32),
+                           dense.pos[0], causal=True, window=window)
     return out, new

@@ -427,8 +427,13 @@ def _attn_window(cfg: ModelConfig, kind: str) -> Optional[int]:
 
 
 def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
-                   mode: str, state, pos, img_x, prefill_cap=None):
-    """Self- or cross-attention residual sub-block. Returns (x, new_state)."""
+                   mode: str, state, pos, img_x, prefill_cap=None, slot=None):
+    """Self- or cross-attention residual sub-block. Returns (x, new_state).
+
+    Modes: ``train`` (no state), ``prefill`` (build a fresh decode cache),
+    ``decode`` (one token per batch row), ``append`` (chunked prefill: a
+    multi-token chunk for ONE paged slot — ``pos`` is the chunk's absolute
+    position vector, ``slot`` the engine slot index)."""
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     is_cross = kind == "cross"
@@ -478,6 +483,10 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
             if mode == "decode":
                 p_ = jnp.asarray(pos, jnp.int32)
                 positions = jnp.maximum(p_, 0) if per_slot else p_[None]
+            elif mode == "append":
+                # chunk of S absolute positions (pad rows carry -1; their
+                # rope angle is irrelevant — the cache write drops them)
+                positions = jnp.maximum(jnp.asarray(pos, jnp.int32), 0)
             else:
                 positions = jnp.arange(S)
             cos, sin = _rope_cos_sin(cfg, positions)
@@ -498,14 +507,37 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
                 v = qkv.fake_quant_kv(v)
             out, new_state = attn.decode_attention(q, state, k, v, pos,
                                                    window=window)
+        elif mode == "append":
+            out, new_state = attn.append_attention(
+                q, state, k, v, jnp.asarray(pos, jnp.int32), slot,
+                window=window)
         else:
+            kq = ksc = vq = vsc = None
+            if ctx.kv_quant != "none":
+                # quantize ONCE and attend over the dequantized view: the
+                # prefill attend then sees exactly the rows a later reader
+                # of the cache (decode, or a paged shared-prefix re-prefill
+                # that only has the codes) reconstructs. Re-quantizing the
+                # dequantized values would round-trip the codes but may
+                # perturb the scales by an ulp, so the codes+scales
+                # computed here are the ones stored.
+                kq, ksc = qkv.quantize_rows(k)
+                vq, vsc = qkv.quantize_rows(v)
+                k = qkv.dequantize(kq, ksc, k.dtype)
+                v = qkv.dequantize(vq, vsc, v.dtype)
             out = attn.self_attention(q.astype(ctx.compute_dtype), k, v,
                                       causal=cfg.causal, window=window)
             if mode == "prefill":
                 cap_total = prefill_cap or S
                 cap = min(cap_total, window) if window else cap_total
-                new_state = attn.build_prefill_cache(k, v, S, cap,
-                                                     kv_quant=ctx.kv_quant)
+                if ctx.kv_quant == "int8":
+                    new_state = attn.build_prefill_cache_from_codes(
+                        kq, ksc, vq, vsc, S, cap)
+                else:
+                    # "fake": k/v already hold the quantize-dequantized
+                    # values, so an fp cache of them IS the reference view
+                    new_state = attn.build_prefill_cache(k, v, S, cap,
+                                                         kv_quant="none")
             else:
                 new_state = None
         out = axes.shard(out, "dp", None, "th", None)
@@ -536,19 +568,20 @@ def _mlp_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes,
 
 def apply_layer(kind: str, x: Array, p, bits, cfg: ModelConfig,
                 ctx: QuantContext, axes: MeshAxes, *, mode: str = "train",
-                state=None, pos=None, img_x=None, prefill_cap=None):
+                state=None, pos=None, img_x=None, prefill_cap=None,
+                slot=None):
     """One residual layer. Returns (x, new_state, aux_loss)."""
     zero = jnp.zeros((), jnp.float32)
     if kind in ("attn", "dense", "cross"):
         st = state
         x, new_st = _attn_sublayer(x, p, bits, cfg, ctx, axes, kind, mode,
-                                   st, pos, img_x, prefill_cap)
+                                   st, pos, img_x, prefill_cap, slot)
         x = _mlp_sublayer(x, p, bits, cfg, ctx, axes,
                           gate_key="gate_mlp" if kind == "cross" else None)
         return x, new_st, zero
     if kind == "moe":
         x, new_st = _attn_sublayer(x, p, bits, cfg, ctx, axes, kind, mode,
-                                   state, pos, img_x, prefill_cap)
+                                   state, pos, img_x, prefill_cap, slot)
         h = apply_norm(x, p["norm2"], cfg.norm_type, cfg.norm_eps)
         out, aux = moe_mod.moe_ffn(h, p["moe"], cfg.moe, _bget(bits, "moe"),
                                    ctx, cfg.act, cfg.mlp_gated, axes)
@@ -761,12 +794,14 @@ def apply_decode(params, cfg: ModelConfig, token: Array, pos, states, bits,
 # ===========================================================================
 def init_site_state(cfg: ModelConfig, kind: str, batch: int, capacity: int,
                     dtype=jnp.bfloat16, per_slot: bool = False,
-                    kv_quant: str = "none"):
+                    kv_quant: str = "none", layout=None):
     """Fresh decode state for ONE layer site of the given kind.
 
     ``kv_quant="int8"`` (or "fake" — same fp layout, quantized values)
     selects the int8 KV layout for self-attention sites; recurrent /
-    cross-attention state is unaffected."""
+    cross-attention state is unaffected. ``layout`` (a
+    ``runtime.kv_cache.KVCacheLayout``) overrides the kind/quant flags for
+    self-attention sites — it's how the paged pool layout is selected."""
     KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
     W = cfg.lru_width or cfg.d_model
     if kind in ("attn", "dense", "moe"):
@@ -774,7 +809,8 @@ def init_site_state(cfg: ModelConfig, kind: str, batch: int, capacity: int,
         cap = min(capacity, window) if window else capacity
         return attn.init_kv_cache(batch, cap, KV, hd, dtype,
                                   per_slot=per_slot,
-                                  quant=kv_quant == "int8")
+                                  quant=kv_quant == "int8",
+                                  layout=layout)
     if kind == "cross":
         n = cfg.n_image_tokens
         return (jnp.zeros((batch, n, KV, hd), dtype),

@@ -58,19 +58,74 @@ from repro.runtime.packing import PackedLinear
 
 Array = jax.Array
 
-_FORCE: List[Optional[str]] = [None]
 _AXES: List = [None]
 _METRICS: List = [None]
 
 
-@contextlib.contextmanager
+# ---------------------------------------------------------------------------
+# route table — one registry + one force mechanism for every routed op
+# ---------------------------------------------------------------------------
+class RouteTable:
+    """Per-op route registry with one forcing mechanism.
+
+    Each routed *op* (packed matmuls, int8 decode attention, the engine's
+    KV layout) registers its legal route names here; ``force_route(op,
+    name)`` pins one for a scope (the single seam behind the legacy
+    ``force_impl`` / ``force_decode_attn`` context managers), ``validate``
+    is what CLI flags (``serve --decode-attn`` / ``--kv-layout``) and
+    engine config checks call, and ``resolve``/``resolve_decode_attn``
+    consult the forced entry first. Forcing is a stack (scopes nest), and
+    ``None`` restores auto-resolution.
+    """
+
+    def __init__(self, ops: Dict[str, tuple]):
+        self.ops = {op: tuple(routes) for op, routes in ops.items()}
+        self._forced: Dict[str, List[Optional[str]]] = {
+            op: [None] for op in self.ops}
+
+    def routes(self, op: str) -> tuple:
+        if op not in self.ops:
+            raise ValueError(f"unknown routed op {op!r}: {tuple(self.ops)}")
+        return self.ops[op]
+
+    def validate(self, op: str, name: str) -> str:
+        routes = self.routes(op)
+        if name not in routes:
+            raise ValueError(f"unknown {op} route {name!r}: {routes}")
+        return name
+
+    def forced(self, op: str) -> Optional[str]:
+        return self._forced[op][-1]
+
+    @contextlib.contextmanager
+    def force_route(self, op: str, name: Optional[str]):
+        """Pin op ``op`` to route ``name`` for the scope (None = auto)."""
+        if name is not None:
+            self.validate(op, name)
+        stack = self._forced[op]
+        stack.append(name)
+        try:
+            yield
+        finally:
+            stack.pop()
+
+
+ROUTES = RouteTable({
+    "matmul": ("dequant-fp", "pallas-int8", "pallas-w4"),
+    "decode_attn": ("fused", "fused-interpret", "dequant-fp"),
+    "kv_layout": ("ring", "paged"),
+})
+
+
+def force_route(op: str, name: Optional[str]):
+    """Module-level alias for ``ROUTES.force_route`` (the one force API)."""
+    return ROUTES.force_route(op, name)
+
+
 def force_impl(name: Optional[str]):
-    """Pin every dispatch to ``name`` (tests; None restores auto)."""
-    _FORCE.append(name)
-    try:
-        yield
-    finally:
-        _FORCE.pop()
+    """Pin every packed-matmul dispatch to ``name`` (tests; None restores
+    auto). Legacy delegate for ``force_route("matmul", name)``."""
+    return ROUTES.force_route("matmul", name)
 
 
 @contextlib.contextmanager
@@ -135,28 +190,19 @@ def _w_contracted_dims(eqn: str):
 # Like matmul routes, resolution happens at trace time; the engine also
 # resolves once at build for its roofline accounting, so a force scope
 # must wrap engine construction AND its first run.
-DECODE_ATTN_ROUTES = ("fused", "fused-interpret", "dequant-fp")
-_DECODE_ATTN: List[Optional[str]] = [None]
+DECODE_ATTN_ROUTES = ROUTES.routes("decode_attn")
 
 
-@contextlib.contextmanager
 def force_decode_attn(name: Optional[str]):
-    """Pin the int8 decode-attention route (tests/CLI; None restores auto)."""
-    if name is not None and name not in DECODE_ATTN_ROUTES:
-        raise ValueError(
-            f"unknown decode-attention route {name!r}: {DECODE_ATTN_ROUTES}")
-    _DECODE_ATTN.append(name)
-    try:
-        yield
-    finally:
-        _DECODE_ATTN.pop()
+    """Pin the int8 decode-attention route (tests/CLI; None restores auto).
+    Legacy delegate for ``force_route("decode_attn", name)``."""
+    return ROUTES.force_route("decode_attn", name)
 
 
 def resolve_decode_attn(backend: Optional[str] = None) -> str:
     """Route for decode attention over an int8 KV cache (see above)."""
-    if _DECODE_ATTN[-1] is not None:
-        route = _DECODE_ATTN[-1]
-    else:
+    route = ROUTES.forced("decode_attn")
+    if route is None:
         backend = backend or jax.default_backend()
         route = "fused" if backend == "tpu" else "dequant-fp"
     _count_route("decode_attn", route)
@@ -376,8 +422,9 @@ def kernel_eligible(eqn: str, pl: PackedLinear) -> Optional[str]:
 
 def resolve(eqn: str, pl: PackedLinear, backend: Optional[str] = None) -> str:
     """Pick the execution route for one packed matmul (see module doc)."""
-    if _FORCE[-1] is not None:
-        return _FORCE[-1]
+    forced = ROUTES.forced("matmul")
+    if forced is not None:
+        return forced
     backend = backend or jax.default_backend()
     if backend != "tpu":
         return "dequant-fp"

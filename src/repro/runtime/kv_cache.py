@@ -1,26 +1,45 @@
-"""Int8 KV-cache quantization with per-head write-time scales.
+"""KV-cache layouts behind one protocol: fp / int8 ring buffers and the
+pooled int8 paged layout, plus the host-side page allocator.
 
-Decode-time KV rows are quantized at *write* time: each cached row keeps a
-per-head symmetric scale ``s = max|x| / 127`` (shape ``(..., Sc, KV)``), so
-dequantization is exact per row and independent of when later rows arrive —
-a "running" scale that never has to re-quantize history. HBM per cache row
-drops from ``2 * KV * hd`` bf16 bytes to ``KV * hd + 4 * KV`` (int8 codes +
-f32 scales), and the scheduler's roofline sees the difference through
-``dist.roofline.decode_step_cost(kv_bits=8)``.
+One cache protocol (:class:`KVCache`): every decode-time cache leaf —
+:class:`FpKVCache` (fp ring), :class:`QuantKVCache` (int8 ring) and
+:class:`PagedKVCache` (int8 pages + slot page table) — implements
+``append / gather / evict / inventory``, and :class:`KVCacheLayout` is the
+one factory (``alloc``) call sites build caches through.  The legacy names
+(``attention.init_kv_cache`` / ``build_prefill_cache`` / ``ring_write`` /
+``cache_per_slot`` / ``init_quant_kv_cache``) remain as thin delegates.
 
-Numerics contract: ``dequantize(*quantize(x)) == fake_quant_kv(x)`` exactly
-— the serving engine with int8 slots is therefore token-identical to a
-reference engine that stores ``fake_quant_kv`` values in an fp cache
-(``QuantContext.kv_quant = "fake"``), which is how the serve smoke asserts
-the packed runtime against the fake-quant graph.
+Int8 quantization: decode-time KV rows are quantized at *write* time with
+a per-head symmetric scale ``s = max|x| / 127`` (shape ``(..., Sc, KV)``),
+so dequantization is exact per row and independent of when later rows
+arrive.  Numerics contract: ``dequantize(*quantize_rows(x)) ==
+fake_quant_kv(x)`` exactly — the serving engine with int8 slots is
+token-identical to a reference engine that stores ``fake_quant_kv`` values
+in an fp cache (``QuantContext.kv_quant = "fake"``).
 
-``QuantKVCache`` mirrors ``models.attention.KVCache`` (same ``k``/``v``/
-``pos`` field names and both position layouts), so the engine's insert /
-evict / per-slot plumbing treats both through ``attention.CACHE_TYPES``.
+Paged layout = ring + block indirection: slot ``b``'s position space
+``[0, P * page_size)`` divides into ``P`` fixed-size pages; token ``t``
+lands in physical page ``page_table[b, t // page_size]`` at in-page row
+``t % page_size``.  ``gather()`` therefore reproduces the dense per-slot
+ring view bit-for-bit (same codes, same scales, same positions), which is
+how the paged engine stays greedy-token-identical to the ring engine.
+Pages are pooled across slots by the host-side :class:`PagePool`
+(free-list + refcounts): requests sharing a page-aligned prompt prefix map
+the *same* physical pages (copy-on-write refcounts), so prefill of a
+cached prefix becomes a page-table update instead of compute.
+
+Accounting: ``inventory()`` itemizes every resident buffer — codes,
+scales, the int32 ``pos`` rows, and for the paged layout the page table
+plus the pool's free-list/refcount arrays (``table`` / ``meta`` parts) —
+so the roofline-vs-inventory reconciliation gate stays honest under
+paging (the PR 5 pos-buffer lesson, extended).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, NamedTuple, Optional, Protocol, Sequence, \
+    Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,20 +50,9 @@ KV_QMAX = 127.0          # symmetric int8 grid (−127..127; −128 unused)
 KV_SCALE_EPS = 1e-8
 
 
-class QuantKVCache(NamedTuple):
-    """Int8 decode-time ring buffer (see module docstring).
-
-    Position layouts match ``attention.KVCache``: shared ``pos (Sc,)`` or
-    per-slot ``pos (B, Sc)`` for the continuous-batching engine.
-    """
-
-    k: Array          # (B, Sc, KV, hd) int8 codes (body-stacked: (R, B, ...))
-    v: Array          # (B, Sc, KV, hd) int8 codes
-    k_scale: Array    # (B, Sc, KV) f32 per-row per-head write-time scale
-    v_scale: Array    # (B, Sc, KV) f32
-    pos: Array        # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
-
-
+# ---------------------------------------------------------------------------
+# int8 row quantization (write-time scales)
+# ---------------------------------------------------------------------------
 def quantize_rows(x: Array) -> Tuple[Array, Array]:
     """Quantize ``(..., hd)`` rows onto the symmetric int8 grid with one
     scale per leading index (per token-row, per head)."""
@@ -66,6 +74,423 @@ def fake_quant_kv(x: Array) -> Array:
     return dequantize(q, s, x.dtype)
 
 
+def _nbytes(*arrs: Array) -> int:
+    import numpy as np
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrs)
+
+
+def _ring_append(cache, rows: Dict[str, Array], pos: Array):
+    """The single write sequence shared by both ring quadrants (shared /
+    per-slot positions).  The slot is ``mod(max(pos, 0), cap)``: a negative
+    sentinel position (an inactive engine slot riding along in the decode
+    batch) clamps to slot 0 and stamps ``pos = -1`` there — never valid to
+    attend — instead of wrapping to ``cap - 1`` and clobbering the ring's
+    tail codes/scales."""
+    cap = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = jnp.mod(jnp.maximum(pos, 0), cap)
+
+    def row_update(c, n, s):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+
+    if cache.pos.ndim == 2:                        # per-slot: pos (B, Sc)
+        upd = {f: jax.vmap(row_update)(getattr(cache, f), r, slot)
+               for f, r in rows.items()}
+        upd["pos"] = jax.vmap(row_update)(cache.pos, pos[:, None], slot)
+    else:                                          # shared: pos (Sc,)
+        upd = {f: jax.lax.dynamic_update_slice_in_dim(getattr(cache, f), r,
+                                                      slot, axis=1)
+               for f, r in rows.items()}
+        upd["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, pos[None], slot, axis=0)
+    return cache._replace(**upd)
+
+
+def _evict_pos(cache, slot):
+    """Invalidate one slot's rows by stamping its ``pos`` to -1 (codes and
+    scales stay resident; a -1 position is never valid to attend)."""
+    axis = cache.pos.ndim - 2  # slot axis: 0 plain, 1 body-stacked
+    empty_shape = list(cache.pos.shape)
+    empty_shape[axis] = 1
+    empty = jnp.full(empty_shape, -1, jnp.int32)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache.pos, empty, slot,
+                                              axis=axis)
+    return cache._replace(pos=pos)
+
+
+# ---------------------------------------------------------------------------
+# cache leaves
+# ---------------------------------------------------------------------------
+class FpKVCache(NamedTuple):
+    """Decode-time fp ring buffer (exported as ``attention.KVCache``).
+
+    Two position layouts share this container:
+
+    * shared  — ``pos (Sc,)``: every batch row sits at the same absolute
+      position (the fixed-batch serving path).
+    * per-slot — ``pos (B, Sc)``: each batch row is an independent serving
+      *slot* with its own position/length (the continuous-batching engine).
+      ``decode_attention`` dispatches on ``pos.ndim``.
+    """
+    k: Array      # (B, Sc, KV, hd) — ring buffer when Sc < full context
+    v: Array
+    pos: Array    # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
+
+    def append(self, k_new: Array, v_new: Array, pos) -> "FpKVCache":
+        return _ring_append(self, {"k": k_new, "v": v_new}, pos)
+
+    def gather(self) -> "FpKVCache":
+        return self            # already the dense per-slot view
+
+    def evict(self, slot) -> "FpKVCache":
+        return _evict_pos(self, slot)
+
+    def inventory(self) -> Dict[str, int]:
+        return {"codes": _nbytes(self.k, self.v),
+                "pos": _nbytes(self.pos)}
+
+
+class QuantKVCache(NamedTuple):
+    """Int8 decode-time ring buffer (see module docstring).
+
+    Position layouts match :class:`FpKVCache`: shared ``pos (Sc,)`` or
+    per-slot ``pos (B, Sc)`` for the continuous-batching engine.
+    """
+
+    k: Array          # (B, Sc, KV, hd) int8 codes (body-stacked: (R, B, ...))
+    v: Array          # (B, Sc, KV, hd) int8 codes
+    k_scale: Array    # (B, Sc, KV) f32 per-row per-head write-time scale
+    v_scale: Array    # (B, Sc, KV) f32
+    pos: Array        # (Sc,) or (B, Sc) int32 absolute position, -1 = empty
+
+    def append(self, k_new: Array, v_new: Array, pos) -> "QuantKVCache":
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        return _ring_append(self, {"k": kq, "v": vq,
+                                   "k_scale": ks, "v_scale": vs}, pos)
+
+    def gather(self) -> "QuantKVCache":
+        return self            # already the dense per-slot view
+
+    def evict(self, slot) -> "QuantKVCache":
+        return _evict_pos(self, slot)
+
+    def inventory(self) -> Dict[str, int]:
+        return {"codes": _nbytes(self.k, self.v),
+                "scales": _nbytes(self.k_scale, self.v_scale),
+                "pos": _nbytes(self.pos)}
+
+
+class PagedKVCache(NamedTuple):
+    """Pooled int8 KV pages + per-slot page table (the paged layout).
+
+    A single physical page-id space backs every slot: page ``p`` holds
+    ``page_size`` consecutive token rows of whichever slot mapped it.
+    ``page_table[b, j] = p`` maps slot ``b``'s j-th logical block onto
+    physical page ``p`` (-1 = unmapped).  Slot ``b``'s token at absolute
+    position ``t`` lives at ``(page_table[b, t // page_size],
+    t % page_size)`` — the linear layout the ring buffer uses for
+    non-wrapping (full-attention, validated-capacity) serving, so
+    :meth:`gather` reproduces the dense ring view bit-for-bit.
+
+    Writes to a sentinel position (``pos < 0`` — an inactive engine slot)
+    or through an unmapped table entry are *dropped* (out-of-bounds
+    scatter), unlike the ring's clamp-to-slot-0; an evicted slot's output
+    is discarded either way, so live-slot numerics are unaffected.
+
+    The host-side :class:`PagePool` owns the free-list / refcounts; its
+    page ids are shared across every layer's ``PagedKVCache`` (the tables
+    are kept in lockstep), while each layer stores its own page contents.
+    """
+
+    k: Array           # (n_pages, page_size, KV, hd) int8 codes
+    v: Array           # (n_pages, page_size, KV, hd) int8 codes
+    k_scale: Array     # (n_pages, page_size, KV) f32 write-time scales
+    v_scale: Array     # (n_pages, page_size, KV) f32
+    pos: Array         # (n_pages, page_size) int32 absolute pos, -1 = empty
+    page_table: Array  # (B, pages_per_slot) int32 physical page, -1 unmapped
+
+    # Shapes are written for the plain (unstacked) layout; a body-stacked
+    # site (scan over repeated layers) carries one extra leading layer axis
+    # on every field — the decode/append paths always see the unstacked
+    # per-layer leaf (lax.scan unstacks), while the engine-level ops below
+    # (map_slot / evict / free_pages / insert_slot) handle both.
+    @property
+    def stacked(self) -> bool:
+        return self.k.ndim == 5
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-3]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[-4]
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.page_table.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    def _target(self, pos: Array, table_rows: Array):
+        """(page_id, in-page row) for absolute positions; OOB-drop sentinel
+        ``n_pages`` for sentinel/unmapped/overflow positions."""
+        ps, cap = self.page_size, self.capacity
+        safe = jnp.clip(pos, 0, cap - 1)
+        blk, row = safe // ps, safe % ps
+        pid = jnp.take_along_axis(table_rows, blk, axis=-1) \
+            if table_rows.ndim == pos.ndim else table_rows[blk]
+        ok = (pos >= 0) & (pos < cap) & (pid >= 0)
+        return jnp.where(ok, pid, self.n_pages), row
+
+    def append(self, k_new: Array, v_new: Array, pos) -> "PagedKVCache":
+        """One decode token per slot: ``k_new (B, 1, KV, hd)``, per-slot
+        position vector ``pos (B,)``."""
+        pos = jnp.asarray(pos, jnp.int32)
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        pid, row = self._target(pos[:, None], self.page_table)
+        pid, row = pid[:, 0], row[:, 0]
+        return self._replace(
+            k=self.k.at[pid, row].set(kq[:, 0], mode="drop"),
+            v=self.v.at[pid, row].set(vq[:, 0], mode="drop"),
+            k_scale=self.k_scale.at[pid, row].set(ks[:, 0], mode="drop"),
+            v_scale=self.v_scale.at[pid, row].set(vs[:, 0], mode="drop"),
+            pos=self.pos.at[pid, row].set(pos, mode="drop"))
+
+    def append_rows(self, k_new: Array, v_new: Array, q_pos: Array,
+                    slot) -> "PagedKVCache":
+        """Chunked (multi-token) append for one slot: ``k_new (1, C, KV,
+        hd)`` rows land at absolute positions ``q_pos (C,)`` (-1 pads are
+        dropped).  This is the prefill-as-page-writes path that kills the
+        prompt-bucketing recompile workaround."""
+        q_pos = jnp.asarray(q_pos, jnp.int32)
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        tbl = jax.lax.dynamic_slice_in_dim(self.page_table, slot, 1,
+                                           axis=0)[0]
+        pid, row = self._target(q_pos, tbl)
+        return self._replace(
+            k=self.k.at[pid, row].set(kq[0], mode="drop"),
+            v=self.v.at[pid, row].set(vq[0], mode="drop"),
+            k_scale=self.k_scale.at[pid, row].set(ks[0], mode="drop"),
+            v_scale=self.v_scale.at[pid, row].set(vs[0], mode="drop"),
+            pos=self.pos.at[pid, row].set(q_pos, mode="drop"))
+
+    def _gather_rows(self, tbl: Array) -> QuantKVCache:
+        safe = jnp.clip(tbl, 0)
+        mapped = tbl >= 0
+        lead = tbl.shape[:-1]
+        flat = lead + (tbl.shape[-1] * self.page_size,)
+
+        def g(pages):
+            return pages[safe].reshape(flat + pages.shape[2:])
+
+        pos = jnp.where(mapped[..., None], self.pos[safe], -1).reshape(flat)
+        return QuantKVCache(g(self.k), g(self.v), g(self.k_scale),
+                            g(self.v_scale), pos)
+
+    def gather(self) -> QuantKVCache:
+        """Dense per-slot ring view ``(B, P * page_size, ...)`` — bit-for-
+        bit the ring layout's arrays (unmapped blocks carry ``pos = -1``,
+        never valid to attend)."""
+        return self._gather_rows(self.page_table)
+
+    def gather_slot(self, slot) -> QuantKVCache:
+        """Dense ``(1, P * page_size, ...)`` view of one slot."""
+        tbl = jax.lax.dynamic_slice_in_dim(self.page_table, slot, 1, axis=0)
+        return self._gather_rows(tbl)
+
+    def _set_table_row(self, slot, row: Array) -> "PagedKVCache":
+        row = jnp.asarray(row, jnp.int32)
+        if self.stacked:
+            R = self.page_table.shape[0]
+            upd = jnp.broadcast_to(row[None, None],
+                                   (R, 1, self.pages_per_slot))
+            table = jax.lax.dynamic_update_slice(self.page_table, upd,
+                                                 (0, slot, 0))
+        else:
+            table = jax.lax.dynamic_update_slice_in_dim(
+                self.page_table, row[None], slot, axis=0)
+        return self._replace(page_table=table)
+
+    def map_slot(self, slot, table_row: Array) -> "PagedKVCache":
+        """Point slot ``slot``'s page list at ``table_row (P,)`` (-1 =
+        unmapped) — the page-table update that replaces prefix prefill."""
+        return self._set_table_row(slot, table_row)
+
+    def evict(self, slot) -> "PagedKVCache":
+        """Unmap one slot (table row -> -1).  Freeing the physical pages —
+        and clearing their ``pos`` rows once the last sharer leaves — is
+        the :class:`PagePool`'s (host) call, via :meth:`free_pages`."""
+        return self._set_table_row(
+            slot, jnp.full((self.pages_per_slot,), -1, jnp.int32))
+
+    def free_pages(self, page_ids: Array) -> "PagedKVCache":
+        """Clear ``pos`` of freed pages to -1 (sentinel-padded ids >=
+        ``n_pages`` are dropped).  Load-bearing: a stale ``pos`` row in a
+        recycled page would be wrongly attendable by its next occupant."""
+        ids = jnp.asarray(page_ids, jnp.int32)
+        safe = jnp.where(ids < 0, self.n_pages, ids)
+        if self.stacked:
+            return self._replace(
+                pos=self.pos.at[:, safe].set(-1, mode="drop"))
+        return self._replace(
+            pos=self.pos.at[safe].set(-1, mode="drop"))
+
+    def insert_slot(self, row: QuantKVCache, slot, table_row: Array,
+                    scatter_ids: Array) -> "PagedKVCache":
+        """Miss-path admission: write a densely-prefilled per-slot row
+        (``row.k (1, Sc, KV, hd)``; body-stacked ``(R, 1, Sc, ...)``) into
+        this slot's pages wholesale and point the table at them.
+        ``table_row (P,)`` is the slot's page list (-1 = unmapped) and
+        ``scatter_ids (P,)`` equals it with unmapped entries replaced by
+        the out-of-bounds sentinel ``n_pages`` (those page writes drop).
+        Rows past ``Sc`` pad with ``pos = -1`` (never attendable)."""
+        ps, P = self.page_size, self.pages_per_slot
+        sids = jnp.asarray(scatter_ids, jnp.int32)
+        Sc = row.k.shape[-3]
+        pad = P * ps - Sc
+        assert pad >= 0, (Sc, P, ps)
+
+        batch_axis = 1 if self.stacked else 0
+
+        def pages_of(a, fill=0):
+            # (1, Sc, trailing...) -> (P, ps, trailing...); stacked rows
+            # ((R, 1, Sc, ...)) keep their leading layer axis
+            a = jnp.squeeze(a, axis=batch_axis)
+            pad_w = [(0, 0)] * a.ndim
+            pad_w[batch_axis] = (0, pad)
+            a = jnp.pad(a, pad_w, constant_values=fill)
+            lead = a.shape[:1] if self.stacked else ()
+            return a.reshape(lead + (P, ps)
+                             + a.shape[batch_axis + 1:])
+
+        k_p = pages_of(row.k)
+        v_p = pages_of(row.v)
+        ks_p = pages_of(row.k_scale)
+        vs_p = pages_of(row.v_scale)
+        pos_p = pages_of(row.pos, fill=-1)
+        if self.stacked:
+            new = self._replace(
+                k=self.k.at[:, sids].set(k_p, mode="drop"),
+                v=self.v.at[:, sids].set(v_p, mode="drop"),
+                k_scale=self.k_scale.at[:, sids].set(ks_p, mode="drop"),
+                v_scale=self.v_scale.at[:, sids].set(vs_p, mode="drop"),
+                pos=self.pos.at[:, sids].set(pos_p, mode="drop"))
+        else:
+            new = self._replace(
+                k=self.k.at[sids].set(k_p, mode="drop"),
+                v=self.v.at[sids].set(v_p, mode="drop"),
+                k_scale=self.k_scale.at[sids].set(ks_p, mode="drop"),
+                v_scale=self.v_scale.at[sids].set(vs_p, mode="drop"),
+                pos=self.pos.at[sids].set(pos_p, mode="drop"))
+        return new._set_table_row(slot, table_row)
+
+    def copy_page(self, src, dst) -> "PagedKVCache":
+        """Device-side page copy for a copy-on-write fork: duplicate page
+        ``src``'s contents into ``dst`` (the shared original is never
+        mutated)."""
+        axis = 1 if self.stacked else 0
+
+        def cp(a):
+            row = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=axis)
+            return jax.lax.dynamic_update_slice_in_dim(a, row, dst,
+                                                       axis=axis)
+        return self._replace(k=cp(self.k), v=cp(self.v),
+                             k_scale=cp(self.k_scale),
+                             v_scale=cp(self.v_scale), pos=cp(self.pos))
+
+    def inventory(self) -> Dict[str, int]:
+        """Codes / scales / pos of every pooled page, the slot page table,
+        and the pool's free-list + refcount arrays (``meta``; one int32
+        each per page — see :meth:`PagePool.meta_bytes`).  The pool is
+        shared across layers, so :func:`tree_inventory` counts ``meta``
+        once per state tree."""
+        return {"codes": _nbytes(self.k, self.v),
+                "scales": _nbytes(self.k_scale, self.v_scale),
+                "pos": _nbytes(self.pos),
+                "table": _nbytes(self.page_table),
+                "meta": 2 * self.n_pages * 4}
+
+
+# Every decode-time cache container; engine/state plumbing that only needs
+# `.pos`/`.page_table` and the slot axis treats them uniformly through it.
+CACHE_TYPES = (FpKVCache, QuantKVCache, PagedKVCache)
+QUANT_CACHE_TYPES = (QuantKVCache, PagedKVCache)
+
+
+class KVCache(Protocol):
+    """The one cache protocol every layout implements (see module doc).
+
+    ``append`` writes decode rows (quantizing at write time for int8
+    layouts), ``gather`` returns the dense per-slot view attention
+    consumes, ``evict`` invalidates one slot, ``inventory`` itemizes
+    resident HBM bytes.  Allocation goes through
+    :meth:`KVCacheLayout.alloc`.
+    """
+
+    def append(self, k_new: Array, v_new: Array, pos): ...
+    def gather(self): ...
+    def evict(self, slot): ...
+    def inventory(self) -> Dict[str, int]: ...
+
+
+# ---------------------------------------------------------------------------
+# layout factory
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVCacheLayout:
+    """How a decode state's KV is laid out — the single ``alloc`` factory
+    behind ``attention.init_kv_cache`` / ``lm.init_site_state`` / the
+    engine's ``EngineConfig.kv_layout``.
+
+    ``kind="ring"`` pre-carves a fixed-capacity buffer per slot (fp or
+    int8 per ``quant``); ``kind="paged"`` pools ``n_pages`` fixed-size
+    int8 pages across slots behind a page table (requires
+    ``quant="int8"``).
+    """
+
+    kind: str = "ring"       # "ring" | "paged"
+    quant: str = "none"      # "none" | "fake" | "int8"
+    page_size: int = 8       # tokens per page (paged)
+    n_pages: int = 0         # pool size; 0 = (batch + 1) * pages_per_slot
+
+    def __post_init__(self):
+        if self.kind not in ("ring", "paged"):
+            raise ValueError(f"unknown kv layout {self.kind!r}")
+        if self.kind == "paged" and self.quant != "int8":
+            raise ValueError(
+                f"paged KV requires quant='int8', got {self.quant!r}")
+
+    def pages_per_slot(self, capacity: int) -> int:
+        return -(-capacity // self.page_size)
+
+    def pool_pages(self, batch: int, capacity: int) -> int:
+        return self.n_pages or (batch + 1) * self.pages_per_slot(capacity)
+
+    def alloc(self, batch: int, capacity: int, kv_heads: int, head_dim: int,
+              *, dtype=jnp.bfloat16, per_slot: bool = False):
+        if self.kind == "paged":
+            if not per_slot:
+                raise ValueError("paged KV is a per-slot (engine) layout")
+            return init_paged_kv_cache(
+                self.pool_pages(batch, capacity), self.page_size, kv_heads,
+                head_dim, batch, self.pages_per_slot(capacity))
+        if self.quant == "int8":
+            return init_quant_kv_cache(batch, capacity, kv_heads, head_dim,
+                                       per_slot=per_slot)
+        pos_shape = (batch, capacity) if per_slot else (capacity,)
+        return FpKVCache(
+            k=jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+            v=jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+            pos=jnp.full(pos_shape, -1, jnp.int32),
+        )
+
+
 def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
                         per_slot: bool = False) -> QuantKVCache:
     pos_shape = (batch, capacity) if per_slot else (capacity,)
@@ -78,43 +503,206 @@ def init_quant_kv_cache(batch: int, capacity: int, kv_heads: int, hd: int,
     )
 
 
-def inventory(cache: QuantKVCache) -> dict:
-    """Resident HBM bytes of one quantized cache, itemized by part:
-    ``codes`` (int8 k+v), ``scales`` (f32 write-time scales) and ``pos``
-    (the int32 position buffer). The ``pos`` rows are part of the resident
-    cache (and of every decode step's attention read — the mask is
-    position-driven), so omitting them undercounted measured HBM vs what
+def init_paged_kv_cache(n_pages: int, page_size: int, kv_heads: int,
+                        hd: int, slots: int,
+                        pages_per_slot: int) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((n_pages, page_size, kv_heads, hd), jnp.int8),
+        v=jnp.zeros((n_pages, page_size, kv_heads, hd), jnp.int8),
+        k_scale=jnp.zeros((n_pages, page_size, kv_heads), jnp.float32),
+        v_scale=jnp.zeros((n_pages, page_size, kv_heads), jnp.float32),
+        pos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        page_table=jnp.full((slots, pages_per_slot), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side page allocator (free-list + refcounts + prefix registry)
+# ---------------------------------------------------------------------------
+class PagePool:
+    """Host bookkeeping for one physical page-id space.
+
+    Pages are reference-counted: a slot mapping a page holds one
+    reference, and every registered prefix-chain entry pins its pages with
+    one more, so a popular prompt prefix survives its requests.  A page's
+    contents become recyclable exactly when its refcount hits zero
+    (``release`` returns the freed ids so the engine can clear their
+    device-side ``pos`` rows).  ``fork`` is the copy-on-write seam: a
+    writer holding a shared page (rc > 1) gets a fresh page and drops its
+    reference — the shared original is never mutated.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self.refcount = [0] * self.n_pages
+        # prefix chain key -> tuple of page ids (each entry pins its pages)
+        self._registry: "OrderedDict[bytes, Tuple[int, ...]]" = OrderedDict()
+
+    # -- allocation ---------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` fresh pages (rc 1 each); evicts LRU registered
+        prefixes to make room; raises when the pool is truly exhausted.
+        Returns ``(ids, freed)`` via :meth:`alloc_with_freed` semantics —
+        use that variant when the caller must clear recycled pages."""
+        ids, _ = self.alloc_with_freed(n)
+        return ids
+
+    def alloc_with_freed(self, n: int) -> Tuple[List[int], List[int]]:
+        freed: List[int] = []
+        while len(self._free) < n and self._registry:
+            freed.extend(self.drop_lru_prefix())
+        if len(self._free) < n:
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, "
+                f"free {len(self._free)}/{self.n_pages}")
+        ids = [self._free.pop() for _ in range(n)]
+        for p in ids:
+            self.refcount[p] = 1
+        return ids, freed
+
+    def ref(self, ids: Sequence[int]) -> None:
+        for p in ids:
+            assert self.refcount[p] > 0, f"ref of free page {p}"
+            self.refcount[p] += 1
+
+    def release(self, ids: Sequence[int]) -> List[int]:
+        """Drop one reference per id; returns the ids whose refcount hit
+        zero (now recycled onto the free list)."""
+        freed: List[int] = []
+        for p in ids:
+            if p < 0:
+                continue
+            assert self.refcount[p] > 0, f"double free of page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+    def fork(self, pid: int) -> Tuple[int, bool, List[int]]:
+        """Copy-on-write: exclusive pages (rc 1) return unchanged; shared
+        pages allocate a fresh id and drop the caller's reference.
+        Returns ``(page_id, needs_copy, freed)``."""
+        if self.refcount[pid] <= 1:
+            return pid, False, []
+        new, freed = self.alloc_with_freed(1)
+        self.refcount[pid] -= 1
+        return new[0], True, freed
+
+    # -- shared-prefix registry ---------------------------------------------
+    def register_prefix(self, chain_keys: Sequence[bytes],
+                        page_ids: Sequence[int]) -> None:
+        """Pin this prompt's full-page prefix chains: ``chain_keys[j]``
+        hashes the first ``(j + 1) * page_size`` tokens and maps to
+        ``page_ids[: j + 1]``.  Every registered entry pins its pages with
+        one reference, so shorter shared prefixes match too."""
+        for j, key in enumerate(chain_keys):
+            if key in self._registry:
+                self._registry.move_to_end(key)
+                continue
+            pages = tuple(page_ids[: j + 1])
+            self._registry[key] = pages
+            self.ref(pages)
+
+    def lookup_prefix(self, chain_keys: Sequence[bytes]) -> Tuple[int, ...]:
+        """Longest registered chain matching this prompt's page-aligned
+        prefix; ``()`` on a miss.  A hit marks the entry most-recently
+        used."""
+        for j in range(len(chain_keys) - 1, -1, -1):
+            pages = self._registry.get(chain_keys[j])
+            if pages is not None:
+                self._registry.move_to_end(chain_keys[j])
+                return pages
+        return ()
+
+    def drop_lru_prefix(self) -> List[int]:
+        """Unpin the least-recently-used registry entry; returns any page
+        ids that became free."""
+        if not self._registry:
+            return []
+        _, pages = self._registry.popitem(last=False)
+        return self.release(pages)
+
+    # -- accounting / invariants --------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def unique_pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def registered_prefixes(self) -> int:
+        return len(self._registry)
+
+    def meta_bytes(self) -> int:
+        """Resident bytes of the allocator's own state: the free list and
+        the refcount array (one int32 each per page) — counted by
+        ``inventory()`` so the reconciliation gate sees them."""
+        return 2 * self.n_pages * 4
+
+    def check(self) -> None:
+        """Leak/consistency invariants (the property tests' oracle):
+        free + referenced partitions the pool; free pages have rc 0."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        for p in range(self.n_pages):
+            if p in free:
+                assert self.refcount[p] == 0, f"free page {p} has refs"
+            else:
+                assert self.refcount[p] > 0, f"leaked page {p} (rc 0, not free)"
+
+
+# ---------------------------------------------------------------------------
+# tree-level accounting
+# ---------------------------------------------------------------------------
+def inventory(cache) -> dict:
+    """Resident HBM bytes of one cache leaf, itemized by part: ``codes``
+    (k+v), ``scales`` (f32 write-time scales), ``pos`` (the int32 position
+    buffer), and for the paged layout ``table`` (the slot page table) +
+    ``meta`` (the pool's free-list/refcount arrays).  Every part is part
+    of the resident cache — omitting any undercounts measured HBM vs what
     the roofline's ``decode_step_cost(kv_bits<=8)`` models; both use this
     same inventory, and the engine exports it as ``engine.kv_*_bytes``
     gauges."""
-    import numpy as np
-
-    def nbytes(*arrs: Array) -> int:
-        return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrs)
-
-    return {"codes": nbytes(cache.k, cache.v),
-            "scales": nbytes(cache.k_scale, cache.v_scale),
-            "pos": nbytes(cache.pos)}
+    return cache.inventory()
 
 
-def cache_bytes(cache: QuantKVCache) -> int:
-    """Measured HBM bytes of one quantized cache (sum of its
-    :func:`inventory`)."""
+def cache_bytes(cache) -> int:
+    """Measured HBM bytes of one cache (sum of its :func:`inventory`)."""
     return sum(inventory(cache).values())
 
 
 def tree_inventory(state) -> dict:
-    """Itemized :func:`inventory` summed over every ``QuantKVCache`` leaf
-    of an engine state tree (zeros when the state holds fp caches)."""
+    """Itemized :func:`inventory` summed over every quantized cache leaf
+    of an engine state tree (zeros when the state holds fp caches).  The
+    paged pool's ``meta`` is shared across layers, so it counts once."""
     total = {"codes": 0, "scales": 0, "pos": 0}
+    meta_counted = False
     for leaf in jax.tree.leaves(
-            state, is_leaf=lambda x: isinstance(x, QuantKVCache)):
-        if isinstance(leaf, QuantKVCache):
+            state, is_leaf=lambda x: isinstance(x, QUANT_CACHE_TYPES)):
+        if isinstance(leaf, QUANT_CACHE_TYPES):
             for part, n in inventory(leaf).items():
-                total[part] += n
+                if part == "meta":
+                    if meta_counted:
+                        continue
+                    meta_counted = True
+                total[part] = total.get(part, 0) + n
     return total
 
 
 def tree_cache_bytes(state) -> int:
     """Total quantized-cache HBM bytes of an engine state tree."""
     return sum(tree_inventory(state).values())
+
+
+def find_paged(state) -> Optional[PagedKVCache]:
+    """First ``PagedKVCache`` leaf of a state tree (None when ring)."""
+    for leaf in jax.tree.leaves(
+            state, is_leaf=lambda x: isinstance(x, CACHE_TYPES)):
+        if isinstance(leaf, PagedKVCache):
+            return leaf
+    return None

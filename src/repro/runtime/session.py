@@ -265,7 +265,8 @@ class QuantizedSession:
         return self.policy_bytes() * 8.0
 
     # -- engine adapter API -------------------------------------------------
-    def _forward(self, params, x, img_x, mode, states, pos, prefill_cap):
+    def _forward(self, params, x, img_x, mode, states, pos, prefill_cap,
+                 slot=None):
         from repro.runtime import dispatch
 
         new_states = {"sites": {}}
@@ -278,7 +279,8 @@ class QuantizedSession:
                 x, st, _ = lm.apply_layer(
                     site.kind, x, params["sites"][key], self._site_bits[key],
                     self.cfg, self.ctx, self.compute_axes, mode=mode,
-                    state=st, pos=pos, img_x=img_x, prefill_cap=prefill_cap)
+                    state=st, pos=pos, img_x=img_x, prefill_cap=prefill_cap,
+                    slot=slot)
                 new_states["sites"][key] = st
         # trace-time count: quantize ops elided from this compiled graph
         self.act_quant_reused += scope["hits"]
@@ -302,12 +304,26 @@ class QuantizedSession:
         logits = lm.lm_head(x, params, self.cfg, self.ctx, self.compute_axes)
         return logits[:, 0], new_states
 
-    def init_state(self, batch, capacity, dtype, per_slot=True):
+    def append(self, params, tok, pos, slot, last_idx, states):
+        """Chunked (paged) prefill: run a (1, C) token chunk through the
+        model for ONE slot, writing KV rows at absolute positions ``pos``
+        ((C,), -1 marks pad rows that are dropped at the cache write) into
+        that slot's pages. Returns (last-valid-row logits (1, V), states)."""
+        x, _ = lm.embed_inputs(params, self.cfg, {"tokens": tok}, self.ctx,
+                               self.compute_axes)
+        x, new_states = self._forward(params, x, None, "append", states, pos,
+                                      None, slot=slot)
+        x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+        logits = lm.lm_head(x_last, params, self.cfg, self.ctx,
+                            self.compute_axes)
+        return logits[:, 0], new_states
+
+    def init_state(self, batch, capacity, dtype, per_slot=True, layout=None):
         kv = "int8" if self.ctx.kv_quant == "int8" else "none"
         return {"sites": {
             _site_key(s.gidx): lm.init_site_state(
                 self.cfg, s.kind, batch, capacity, dtype=dtype,
-                per_slot=per_slot, kv_quant=kv)
+                per_slot=per_slot, kv_quant=kv, layout=layout)
             for s in self.sites}}
 
     def state_per_slot(self, row):

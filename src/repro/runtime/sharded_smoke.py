@@ -22,8 +22,8 @@ from repro.configs import smoke_config
 from repro.data import SyntheticLM
 from repro.dist import sharding
 from repro.dist.axes import NO_AXES, MeshAxes
-from repro.launch.engine import DecodeEngine, EngineConfig
-from repro.launch.serve import build_requests, demo_mixed_policy
+from repro.launch.engine import DecodeEngine
+from repro.launch.serve import ServeConfig, build_requests, demo_mixed_policy
 from repro.models import lm
 from repro.models.quant_layers import QuantContext
 from repro.runtime.session import QuantizedSession
@@ -40,24 +40,25 @@ def run_sharded_vs_single(preset: Dict[str, Any] | None = None,
     ``sharded`` carries the mesh run's session/engine/axes/tokens for the
     caller's assertions."""
     p = dict(DEFAULT_PRESET, **(preset or {}))
-    cfg = smoke_config(p["arch"])
+    scfg = ServeConfig(arch=p["arch"], requests=p["n_requests"],
+                       slots=p["slots"], prompt_len=p["prompt_len"],
+                       gen=p["gen"], stagger=True,
+                       arrive_every=p["arrive_every"])
+    cfg = smoke_config(scfg.arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
                             compute_dtype=jnp.float32)
     policy = demo_mixed_policy(cfg)
     data = SyntheticLM(cfg)
-    reqs = build_requests(data, p["n_requests"], p["prompt_len"], p["gen"],
-                          stagger=True, arrive_every=p["arrive_every"])
-    cache_len = p["prompt_len"] + p["gen"]
+    reqs = build_requests(data, scfg.requests, scfg.prompt_len, scfg.gen,
+                          stagger=scfg.stagger,
+                          arrive_every=scfg.arrive_every)
 
     def run(axes: MeshAxes):
         sess = QuantizedSession(cfg, params, policy, ctx, axes,
                                 mode="packed", kv_quant="int8")
         eng = DecodeEngine(sess.params, cfg, None, ctx, axes,
-                           EngineConfig(slots=p["slots"],
-                                        cache_len=cache_len,
-                                        kv_quant="int8",
-                                        bucket_prompts=True), adapter=sess)
+                           scfg.engine_config(kv_quant="int8"), adapter=sess)
         eng.submit_all(reqs)
         out = eng.run()
         return sess, eng, {r.rid: out[r.rid].tokens for r in reqs}

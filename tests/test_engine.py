@@ -194,6 +194,112 @@ def test_engine_rejects_duplicate_rid(setup):
         eng.submit(Request(0, np.zeros(4, np.int32), 2))
 
 
+# ---------------------------------------------------------------------------
+# paged KV layout: shared-prefix serving stays token-identical to ring
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def packed_setup():
+    """Packed int8 session + engine factory — the only adapter the paged
+    layout serves (it needs the chunked ``append`` path)."""
+    from repro.core.policy import MPQPolicy
+    from repro.runtime.session import QuantizedSession
+
+    cfg = smoke_config("limpq-demo")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    policy = MPQPolicy.uniform(lm.enumerate_qlayers(cfg), 4)
+
+    def build(layout, cache_len=29):
+        sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+                                kv_quant="int8")
+        eng = DecodeEngine(sess.params, cfg, None, ctx, NO_AXES,
+                           EngineConfig(slots=2, cache_len=cache_len,
+                                        kv_quant="int8", kv_layout=layout,
+                                        page_size=8), adapter=sess)
+        return sess, eng
+
+    return dict(cfg=cfg, params=params, ctx=ctx, build=build)
+
+
+def test_paged_engine_token_identical_and_saves_prefill(packed_setup):
+    """Three requests share a 16-token (2-page) prompt prefix, one doesn't;
+    the paged engine must generate exactly the ring engine's tokens while
+    re-mapping the shared pages instead of re-prefilling them — >0 FLOPs
+    saved, strictly fewer prefill tokens, and ONE prefill compile shape
+    (chunked append replaces the ring path's prompt-length bucketing)."""
+    rng = np.random.default_rng(11)
+    shared = rng.integers(1, 400, size=16)
+
+    def mk(rid, tail, arrival=0):
+        toks = np.concatenate(
+            [shared, rng.integers(1, 400, size=tail)]).astype(np.int32)
+        return Request(rid=rid, tokens=toks, max_new=4, arrival=arrival)
+
+    reqs = [mk(0, 5), mk(1, 3, 1), mk(2, 7, 2),
+            Request(rid=3, tokens=rng.integers(1, 400, size=9).astype(
+                np.int32), max_new=4, arrival=2)]
+    toks, stats = {}, {}
+    from repro.runtime import dispatch
+    for layout in ("ring", "paged"):
+        _, eng = packed_setup["build"](layout)
+        with dispatch.force_decode_attn("dequant-fp"):
+            eng.submit_all(reqs)
+            out = eng.run()
+        toks[layout] = {r.rid: out[r.rid].tokens for r in reqs}
+        stats[layout] = eng.stats
+        if layout == "paged":
+            eng.pool.check()            # no page leaked after the drain
+            assert all(s is None for s in eng.slots)
+    assert toks["paged"] == toks["ring"]
+    assert stats["paged"].prefill_flops_saved > 0
+    assert stats["ring"].prefill_flops_saved == 0
+    assert stats["paged"].prefill_tokens < stats["ring"].prefill_tokens
+    assert stats["paged"].prefill_compiles == 1
+    assert stats["paged"].kv_unique_pages > 0
+
+
+def test_paged_engine_validation(packed_setup):
+    """The paged layout's construction-time contract: route-registry
+    validation plus int8-KV and append-capable-adapter requirements."""
+    cfg, params, ctx = (packed_setup[k] for k in ("cfg", "params", "ctx"))
+    bits = lm.bits_uniform(cfg, 3)
+    with pytest.raises(ValueError, match="kv_layout"):
+        DecodeEngine(params, cfg, bits, ctx, NO_AXES,
+                     EngineConfig(slots=2, cache_len=16,
+                                  kv_layout="blocked"))
+    # the fake-quant reference adapter has no chunked append path
+    with pytest.raises(ValueError, match="append-capable"):
+        DecodeEngine(params, cfg, bits, ctx, NO_AXES,
+                     EngineConfig(slots=2, cache_len=16, kv_quant="int8",
+                                  kv_layout="paged"))
+    with pytest.raises(ValueError, match="int8"):
+        DecodeEngine(params, cfg, bits, ctx, NO_AXES,
+                     EngineConfig(slots=2, cache_len=16, kv_quant="none",
+                                  kv_layout="paged"))
+
+
+def test_serve_config_validates_routes():
+    """``ServeConfig`` rejects bad combinations at construction — before
+    any engine or session is built."""
+    from repro.launch.serve import ServeConfig
+
+    scfg = ServeConfig(kv_layout="paged", page_size=8)
+    assert scfg.engine_config().kv_layout == "paged"
+    # a non-int8 engine of the same run silently serves through ring
+    assert scfg.engine_config(kv_quant="fake").kv_layout == "ring"
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(kv_layout="paged", kv="fp")
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServeConfig(kv_layout="blocked")
+    with pytest.raises(ValueError, match="decode_attn"):
+        ServeConfig(decode_attn="flash")
+    with pytest.raises(ValueError, match="schedule"):
+        ServeConfig(schedule="round-robin")
+    with pytest.raises(ValueError, match="single-device"):
+        ServeConfig(kv_layout="paged", mesh="2x4")
+
+
 def test_roofline_scheduler_hook():
     from repro.configs import get_config
     from repro.dist import roofline

@@ -233,6 +233,126 @@ def test_force_decode_attn_route_validation():
 
 
 # ---------------------------------------------------------------------------
+# paged layout vs ring: bitwise lockstep + accounting reconciliation
+# ---------------------------------------------------------------------------
+def _paged_from_ring(cache, ps):
+    """Identity-map a non-wrapping per-slot ring cache into the paged
+    layout: slot ``b`` maps pages ``b*P .. b*P+P-1``, so logical slot
+    ``j*ps + r`` is page block ``(j, r)`` — a pure reshape of the ring
+    arrays."""
+    B, cap, KV, hd = cache.k.shape
+    assert cap % ps == 0
+    P = cap // ps
+    return qkv.PagedKVCache(
+        k=cache.k.reshape(B * P, ps, KV, hd),
+        v=cache.v.reshape(B * P, ps, KV, hd),
+        k_scale=cache.k_scale.reshape(B * P, ps, KV),
+        v_scale=cache.v_scale.reshape(B * P, ps, KV),
+        pos=cache.pos.reshape(B * P, ps),
+        page_table=jnp.arange(B * P, dtype=jnp.int32).reshape(B, P))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from([(1, 2), (2, 2)]),       # (KV, G)
+       st.integers(min_value=0, max_value=3),   # seed
+       st.sampled_from([4, 8]))                 # page size
+def test_paged_decode_bitwise_identical_to_ring(kvg, seed, ps):
+    """The tentpole's numerics contract: the same logical rows served
+    through the page table must produce bit-identical decode attention on
+    BOTH routes (the dequant path attends ``gather()``'s dense view; the
+    fused path gathers by page index inside the kernel grid), and the
+    decode write must land at the same logical row, bit for bit.  The
+    dequant route is exactly the ring graph after ``gather()`` — bitwise
+    — while the fused kernel partitions the flash accumulation by page
+    instead of ring block, so its contract is the serving one: greedy
+    argmax identity (plus the routes' usual fp agreement).  A sentinel
+    (-1) slot is the one write divergence by design: ring clamps the
+    write to slot 0, paged drops it — both rows stay unattendable."""
+    KV, G = kvg
+    B, hd, H, P = 3, 8, KV * G, 2
+    cap = P * ps
+    r = np.random.RandomState(seed)
+    next_pos = [cap - 1, max(1, cap // 2), -1]  # nearly full, half, evicted
+    ring = _build_ring_cache(r, B, cap, KV, hd, next_pos)
+    paged = _paged_from_ring(ring, ps)
+    q = jnp.asarray(r.normal(size=(B, 1, H, hd)), jnp.float32)
+    k_new = jnp.asarray(r.normal(size=(B, 1, KV, hd)), jnp.float32)
+    v_new = jnp.asarray(r.normal(size=(B, 1, KV, hd)), jnp.float32)
+    pos = jnp.asarray(next_pos, jnp.int32)
+    active = [b for b, p in enumerate(next_pos) if p >= 0]
+    W = np.random.RandomState(7).normal(size=(H * hd, 64)).astype(np.float32)
+    for route in ("dequant-fp", "fused-interpret"):
+        with dispatch.force_decode_attn(route):
+            out_r, c_r = attn.decode_attention(q, ring, k_new, v_new, pos,
+                                               window=None)
+            out_p, c_p = attn.decode_attention(q, paged, k_new, v_new, pos,
+                                               window=None)
+        out_r, out_p = np.asarray(out_r)[active], np.asarray(out_p)[active]
+        if route == "dequant-fp":
+            np.testing.assert_array_equal(out_p, out_r, route)
+        else:
+            np.testing.assert_allclose(out_p, out_r, rtol=2e-5, atol=2e-6)
+            lg_r, lg_p = out_r.reshape(len(active), -1) @ W, \
+                out_p.reshape(len(active), -1) @ W
+            top2 = np.sort(lg_r, axis=-1)[:, -2:]
+            decisive = top2[:, 1] - top2[:, 0] > 1e-4
+            np.testing.assert_array_equal(lg_p.argmax(-1)[decisive],
+                                          lg_r.argmax(-1)[decisive], route)
+        g = c_p.gather()
+        np.testing.assert_array_equal(np.asarray(g.pos),
+                                      np.asarray(c_r.pos), route)
+        for f in ("k", "v", "k_scale", "v_scale"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(g, f))[active],
+                np.asarray(getattr(c_r, f))[active], f"{route}:{f}")
+
+
+def test_roofline_paged_kv_bytes_match_inventory():
+    """Paged counterpart of the ring reconciliation: with every pool page
+    unique-touched, ``decode_step_cost(unique_pages=..., page_size=...)``
+    must match the measured paged inventory (codes + scales + pos + page
+    table + pool meta, meta once per tree) within 5% — the pool's host
+    free-list/refcount meta is deliberately the only uncharged part."""
+    cfg = smoke_config("limpq-demo")
+    slots, cache_len, ps = 4, 24, 8
+    state = lm.init_decode_state(cfg, slots, cache_len, per_slot=True,
+                                 kv_quant="int8")
+    ring_leaves = [
+        c for c in jax.tree.leaves(
+            state, is_leaf=lambda x: isinstance(x, qkv.QuantKVCache))
+        if isinstance(c, qkv.QuantKVCache)]
+    layout = qkv.KVCacheLayout(kind="paged", quant="int8", page_size=ps)
+    paged = [layout.alloc(slots, cache_len, c.k.shape[2], c.k.shape[3],
+                          per_slot=True) for c in ring_leaves]
+    measured = sum(qkv.cache_bytes(c) for c in paged) \
+        - (len(paged) - 1) * paged[0].inventory()["meta"]
+    model = roofline.decode_step_cost(
+        cfg, slots, cache_tokens=cache_len, kv_bits=8.0, kv_attend="fused",
+        unique_pages=layout.pool_pages(slots, cache_len),
+        page_size=ps)["kv_hbm_bytes"]
+    assert measured > 0
+    assert abs(model - measured) / measured <= 0.05, (model, measured)
+
+
+def test_roofline_paged_term_validation():
+    """Shared prefixes shrink the modeled KV traffic (fewer unique pages
+    touched), and the paged kwargs validate: a paged cost needs a positive
+    page size and int8-or-narrower KV."""
+    cfg = smoke_config("limpq-demo")
+    kw = dict(cache_tokens=24, kv_bits=8.0, kv_attend="fused")
+    full = roofline.decode_step_cost(cfg, 4, unique_pages=15, page_size=8,
+                                     **kw)
+    shared = roofline.decode_step_cost(cfg, 4, unique_pages=3, page_size=8,
+                                       **kw)
+    assert shared["kv_hbm_bytes"] < full["kv_hbm_bytes"]
+    with pytest.raises(ValueError):
+        roofline.decode_step_cost(cfg, 4, unique_pages=3, **kw)
+    with pytest.raises(ValueError):
+        roofline.decode_step_cost(cfg, 4, cache_tokens=24, kv_bits=16.0,
+                                  unique_pages=3, page_size=8)
+
+
+# ---------------------------------------------------------------------------
 # KV_SCALE_EPS zero-row audit (satellite)
 # ---------------------------------------------------------------------------
 def test_zero_k_row_contributes_exactly_zero_logits():
