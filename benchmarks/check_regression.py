@@ -70,6 +70,13 @@ GATED_QUANT = {
     "prefill_flops_saved": -1,
     "shared_prefix_prefill_compiles": +1,
     "shared_prefix_prefill_tokens": +1,
+    # quantization health: pack-time saturation growing = the trained
+    # scales stopped covering the served weights; any monitor alert on
+    # the demo preset = the signal plane stopped being quiet on a healthy
+    # workload (the bench itself also hard-asserts alerts_fired == 0, so
+    # a zero baseline can never mask a regression via the ratio formula)
+    "saturation_rate_max": +1,
+    "alerts_fired": +1,
 }
 INFO_QUANT = (
     "packed_tok_per_s",
@@ -84,6 +91,10 @@ INFO_QUANT = (
     "ttft_p95_ms",
     "itl_p50_ms",
     "roofline_modeled_vs_measured",
+    # pack-time scale utilization (max|w| / (scale * qmax), p50 over
+    # sites): informational — tracks how tightly the trained scales hug
+    # the served weights, but init noise moves it
+    "scale_utilization_p50",
 )
 
 # boolean identity flags checked per profile (False or missing = failure)

@@ -256,6 +256,13 @@ def run(fast: bool = True):
     sharded = _sharded_counters(p)
     shared_prefix = _shared_prefix_counters(cfg, params, ctx, policy, fast)
     pstats = results["packed"]["stats"]
+    # pack-time quantization health: the demo policy packs from its own
+    # init's trained-scale bank, so saturation stays near zero and the
+    # engine's saturation watcher must never trip (alerts_fired == 0 is
+    # gated — a baseline regression here means scales stopped covering
+    # the served weights)
+    from repro.obs import health as obs_health
+    pack_health = obs_health.pack_summary(sess.pack_health)
     # measured-vs-modeled phase ratios from the packed engine's (warmed)
     # measured epoch — the roofline calibration loop, ungated in CI: the
     # ratios are host-dependent, their *presence and finiteness* is not
@@ -279,6 +286,9 @@ def run(fast: bool = True):
         "decode_attn_hbm_bytes": int(measured_kv),
         "decode_attn_model_vs_measured": kv_ratio,
         "decode_attn_bytes_match": bool(abs(kv_ratio - 1.0) <= 0.05),
+        "saturation_rate_max": pack_health["saturation_rate_max"],
+        "alerts_fired": pstats["alerts_fired"],
+        "scale_utilization_p50": pack_health["scale_utilization_p50"],
         # informational
         "packed_bytes": info["packed_bytes"],
         "scale_bytes": info["scale_bytes"],
@@ -334,6 +344,12 @@ def run(fast: bool = True):
           f"vs ring {shared_prefix['shared_prefix_ring_prefill_tokens']}) | "
           f"{shared_prefix['shared_prefix_prefill_compiles']} compile "
           f"shape(s)")
+    print(f"  pack health: saturation_rate_max="
+          f"{pack_health['saturation_rate_max']:.4f} "
+          f"scale_utilization_p50="
+          f"{pack_health['scale_utilization_p50']:.3f} over "
+          f"{pack_health['sites']} sites | alerts_fired="
+          f"{out['alerts_fired']}")
     print(f"  -> {BENCH_PATH}")
     assert shared_prefix["shared_prefix_token_identical"], \
         "paged layout diverged from the ring layout on a shared prefix"
@@ -353,6 +369,10 @@ def run(fast: bool = True):
     assert out["decode_attn_bytes_match"], \
         (f"decode_step_cost kv bytes off the measured cache inventory by "
          f"more than 5% (x{kv_ratio:.3f})")
+    assert out["alerts_fired"] == 0, \
+        (f"{out['alerts_fired']} monitor alert(s) fired on the demo preset "
+         f"(saturation_rate_max={out['saturation_rate_max']:.4f}): "
+         "the signal plane must stay quiet on a healthy workload")
     return out
 
 

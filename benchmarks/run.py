@@ -20,6 +20,7 @@
                                 informational, never gated)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--full]
+       PYTHONPATH=src python -m benchmarks.run --baseline
 """
 import argparse
 import time
@@ -30,13 +31,103 @@ MODULES = ["kernel_report", "search_efficiency", "joint_training",
            "hessian_baseline", "feasibility", "roofline_report",
            "serve_bench", "quant_serve_bench", "roofline_calibration"]
 
+# --baseline: profile -> (fresh bench JSON, checked-in baseline JSON)
+BASELINE_PAIRS = {
+    "serve": ("out/BENCH_serve.json", "baselines/serve_baseline.json"),
+    "quant": ("out/BENCH_quant_serve.json",
+              "baselines/quant_serve_baseline.json"),
+}
+EXPERIMENTS_MD = "experiments/EXPERIMENTS.md"
+
+
+def baseline_dryrun():
+    """Dry-run delta report: compare the bench JSONs already under
+    ``benchmarks/out/`` against the checked-in baselines (no benchmark is
+    re-run) and append a dated markdown delta table to
+    ``experiments/EXPERIMENTS.md``. Metric tables and regression
+    directions come from ``check_regression`` — the same source the CI
+    gate reads, so the experiment log and the gate can never disagree on
+    what a metric means."""
+    import datetime
+    import json
+    import os
+
+    from benchmarks import check_regression as cr
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(here)
+    lines = [f"## Baseline dry-run — "
+             f"{datetime.date.today().isoformat()}", ""]
+    lines.append("| profile | metric | baseline | current | delta | gate |")
+    lines.append("|---|---|---|---|---|---|")
+    n_rows = 0
+    for profile, (cur_rel, base_rel) in sorted(BASELINE_PAIRS.items()):
+        cur_path = os.path.join(here, cur_rel)
+        base_path = os.path.join(here, base_rel)
+        if not os.path.exists(cur_path):
+            print(f"  [{profile}] skipped: {cur_rel} not found (run the "
+                  "benchmarks first)")
+            continue
+        cur = json.load(open(cur_path))
+        base = json.load(open(base_path))
+        gated, info_metrics, _ = cr.PROFILES[profile]
+        flags = cr.IDENTITY_FLAGS[profile]
+        for metric in list(gated) + list(flags) + list(info_metrics):
+            b, c = base.get(metric), cur.get(metric)
+            if c is None or isinstance(c, dict):
+                continue
+            if isinstance(c, bool) or isinstance(b, bool):
+                delta = "—"
+            elif isinstance(b, (int, float)) and b:
+                delta = f"{(c - b) / b:+.1%}"
+            else:
+                delta = "—"
+            kind = ("gated" if metric in gated else
+                    "identity" if metric in flags else "info")
+
+            def fmt(v):
+                if isinstance(v, bool):
+                    return str(v)
+                if isinstance(v, float):
+                    return f"{v:.4g}"
+                return str(v)
+            lines.append(f"| {profile} | {metric} | {fmt(b)} | {fmt(c)} "
+                         f"| {delta} | {kind} |")
+            n_rows += 1
+    if not n_rows:
+        raise SystemExit("--baseline: no bench outputs to compare "
+                         "(benchmarks/out/ is empty)")
+    lines.append("")
+    md = os.path.join(root, EXPERIMENTS_MD)
+    os.makedirs(os.path.dirname(md), exist_ok=True)
+    fresh = not os.path.exists(md)
+    with open(md, "a") as f:
+        if fresh:
+            f.write("# Experiment log\n\nDated delta tables appended by "
+                    "`python -m benchmarks.run --baseline` (dry-run: "
+                    "compares `benchmarks/out/*.json` against the "
+                    "checked-in baselines without re-running anything).\n"
+                    "`gate` column: gated/identity rows fail CI on "
+                    "regression (`benchmarks/check_regression.py`); info "
+                    "rows are the artifact trail.\n\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"  {n_rows} delta rows -> {EXPERIMENTS_MD}")
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true",
                     help="full-size demo model (slower)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="dry-run: diff benchmarks/out/*.json against the "
+                         "checked-in baselines and append a dated delta "
+                         "table to experiments/EXPERIMENTS.md (runs no "
+                         "benchmarks)")
     args = ap.parse_args()
+    if args.baseline:
+        baseline_dryrun()
+        return
     mods = [args.only] if args.only else MODULES
     results, failures = {}, []
     for name in mods:

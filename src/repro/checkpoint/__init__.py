@@ -161,12 +161,25 @@ class CheckpointManager:
 # ---------------------------------------------------------------------------
 def save_serving_bundle(directory: str, step: int, params,
                         policy, *, extra_meta: Optional[dict] = None,
+                        solve_report: Optional[Any] = None,
                         keep_n: int = 3) -> None:
     """Checkpoint trained params together with the searched ``MPQPolicy``
     (stored in the step's meta.json), so the serving runtime can restore a
-    deployable (params, policy) pair from one atomic artifact."""
+    deployable (params, policy) pair from one atomic artifact.
+
+    ``solve_report`` (a ``core.ilp.SolveReport``, or its ``to_json()``
+    string) rides along as ``meta["solve_report"]`` — the ILP audit trail
+    ``serve --explain-policy`` renders. When omitted, a report already
+    embedded in ``policy.meta["solve_report"]`` by ``search_policy`` is
+    promoted into the bundle meta so explainability survives the bundle
+    round trip either way."""
     meta = dict(extra_meta or {})
     meta["mpq_policy"] = policy.to_json()
+    if solve_report is None:
+        solve_report = getattr(policy, "meta", {}).get("solve_report")
+    if solve_report is not None:
+        meta["solve_report"] = (solve_report if isinstance(solve_report, str)
+                                else solve_report.to_json())
     mgr = CheckpointManager(directory, keep_n=keep_n)
     mgr.save(step, params, meta=meta, blocking=True)
 

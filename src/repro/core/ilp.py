@@ -16,7 +16,10 @@ sum of per-layer choice costs <= budget, picking exactly one choice per layer
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
 import numpy as np
 
 
@@ -270,3 +273,259 @@ def solve_mckp_dual(values, costs_a, budget_a: float, costs_b,
         "dual",
         optimal=False,
     )
+
+# ---------------------------------------------------------------------------
+# SolveReport: the ILP audit trail
+# ---------------------------------------------------------------------------
+SOLVE_REPORT_SCHEMA = 1
+
+
+@dataclass
+class SolveReport:
+    """Structured audit of one MCKP solve: *why* each layer got its bits.
+
+    Everything the serving side needs to explain (and re-verify) a
+    policy: the candidate grid, per-layer chosen bits, the objective
+    decomposed per layer (``importance``), and every constraint with its
+    used cost and slack. Round-trips to JSON (``to_json``/``from_json``)
+    so ``checkpoint`` can embed it in the serving bundle and ``serve
+    --explain-policy`` can render it back as a table.
+
+    Replaying the audit is cheap and exact: ``chosen_w``/``chosen_a``
+    rebuilt into an ``MPQPolicy`` must validate against the qlayers, and
+    ``policy.size_bytes * 8`` must equal the ``size_bits`` constraint's
+    ``used`` — the property the tests pin.
+    """
+
+    layers: List[str]                    # per-layer site names
+    bits: List[int]                      # searched candidate widths
+    chosen_w: List[int]                  # chosen weight bits per layer
+    chosen_a: List[int]                  # chosen activation bits per layer
+    importance: List[float]              # per-layer chosen objective term
+    candidate_values: List[List[float]]  # (L, n*n) objective grid
+    candidate_costs: Dict[str, List[List[float]]]  # name -> (L, n*n)
+    constraints: List[Dict[str, Any]]    # name/budget/used/slack/binding
+    objective: float
+    solver: str
+    optimal: bool
+    elapsed_s: float
+    meta: Dict[str, Any] = field(default_factory=dict)
+    schema: int = SOLVE_REPORT_SCHEMA
+
+    # -- accessors ---------------------------------------------------------
+    @property
+    def binding(self) -> str:
+        """Name of the binding (smallest relative slack) constraint."""
+        for c in self.constraints:
+            if c.get("binding"):
+                return str(c["name"])
+        return "none"
+
+    def constraint(self, name: str) -> Dict[str, Any]:
+        for c in self.constraints:
+            if c["name"] == name:
+                return c
+        raise KeyError(f"no constraint {name!r} in report")
+
+    def policy_bits(self) -> Dict[str, Dict[str, int]]:
+        """{"w_bits": {...}, "a_bits": {...}} keyed by layer name."""
+        return {
+            "w_bits": dict(zip(self.layers, self.chosen_w)),
+            "a_bits": dict(zip(self.layers, self.chosen_a)),
+        }
+
+    # -- json round-trip ---------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "schema": self.schema,
+            "layers": list(self.layers),
+            "bits": [int(b) for b in self.bits],
+            "chosen_w": [int(b) for b in self.chosen_w],
+            "chosen_a": [int(b) for b in self.chosen_a],
+            "importance": [float(v) for v in self.importance],
+            "candidate_values": [[float(v) for v in row]
+                                 for row in self.candidate_values],
+            "candidate_costs": {k: [[float(v) for v in row] for row in m]
+                                for k, m in self.candidate_costs.items()},
+            "constraints": [dict(c) for c in self.constraints],
+            "objective": float(self.objective),
+            "solver": self.solver,
+            "optimal": bool(self.optimal),
+            "elapsed_s": float(self.elapsed_s),
+            "meta": dict(self.meta),
+        }
+
+    @classmethod
+    def from_json(cls, obj: Dict[str, Any]) -> "SolveReport":
+        schema = int(obj.get("schema", 0))
+        if schema > SOLVE_REPORT_SCHEMA:
+            raise ValueError(
+                f"SolveReport schema {schema} is newer than supported "
+                f"{SOLVE_REPORT_SCHEMA}")
+        return cls(
+            layers=list(obj["layers"]),
+            bits=[int(b) for b in obj["bits"]],
+            chosen_w=[int(b) for b in obj["chosen_w"]],
+            chosen_a=[int(b) for b in obj["chosen_a"]],
+            importance=[float(v) for v in obj["importance"]],
+            candidate_values=[list(map(float, r))
+                              for r in obj["candidate_values"]],
+            candidate_costs={k: [list(map(float, r)) for r in m]
+                             for k, m in obj["candidate_costs"].items()},
+            constraints=[dict(c) for c in obj["constraints"]],
+            objective=float(obj["objective"]),
+            solver=str(obj["solver"]),
+            optimal=bool(obj["optimal"]),
+            elapsed_s=float(obj["elapsed_s"]),
+            meta=dict(obj.get("meta", {})),
+            schema=schema,
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "SolveReport":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- human rendering ---------------------------------------------------
+    def render_table(self) -> str:
+        """The ``serve --explain-policy`` table: one row per layer plus
+        the constraint footer naming the binding budget."""
+        size = self.candidate_costs.get("size_bits")
+        ops = self.candidate_costs.get("bitops")
+        n = len(self.bits)
+        header = (f"{'layer':<28} {'w':>2} {'a':>2} {'importance':>12} "
+                  f"{'kbytes':>10} {'bitops':>12}")
+        lines = [header, "-" * len(header)]
+        for l, name in enumerate(self.layers):
+            i = self.bits.index(self.chosen_w[l])
+            j = self.bits.index(self.chosen_a[l])
+            c = i * n + j
+            kb = size[l][c] / 8.0 / 1024.0 if size else float("nan")
+            bo = ops[l][c] if ops else float("nan")
+            lines.append(f"{name:<28} {self.chosen_w[l]:>2} "
+                         f"{self.chosen_a[l]:>2} {self.importance[l]:>12.5g} "
+                         f"{kb:>10.2f} {bo:>12.4g}")
+        lines.append("")
+        lines.append(f"objective {self.objective:.6g}  solver {self.solver}"
+                     f"{' (optimal)' if self.optimal else ''}  "
+                     f"elapsed {self.elapsed_s * 1e3:.1f} ms")
+        for c in self.constraints:
+            mark = "  <- binding" if c.get("binding") else ""
+            if c["budget"] is None:
+                lines.append(f"constraint {c['name']:<10} budget -         "
+                             f"used {c['used']:.4g}  (tracked, unconstrained)")
+            else:
+                lines.append(
+                    f"constraint {c['name']:<10} budget {c['budget']:.4g}  "
+                    f"used {c['used']:.4g}  slack {c['slack']:.4g} "
+                    f"({100.0 * c['slack_frac']:.1f}%){mark}")
+        return "\n".join(lines)
+
+
+def _constraint_rows(used_by_name: Dict[str, float],
+                     budget_by_name: Dict[str, Optional[float]]
+                     ) -> List[Dict[str, Any]]:
+    """Constraint dicts with slack; the smallest relative slack among
+    constraints that HAVE a budget is marked binding."""
+    rows: List[Dict[str, Any]] = []
+    for name, used in used_by_name.items():
+        budget = budget_by_name.get(name)
+        if budget is None:
+            rows.append({"name": name, "budget": None, "used": float(used),
+                         "slack": None, "slack_frac": 0.0, "binding": False})
+            continue
+        slack = float(budget) - float(used)
+        frac = slack / budget if budget else 0.0
+        rows.append({"name": name, "budget": float(budget),
+                     "used": float(used), "slack": slack,
+                     "slack_frac": frac, "binding": False})
+    budgeted = [r for r in rows if r["budget"] is not None]
+    if budgeted:
+        min(budgeted, key=lambda r: r["slack_frac"])["binding"] = True
+    return rows
+
+
+def build_solve_report(
+    layers: Sequence[str],
+    bits: Sequence[int],
+    sol: MCKPSolution,
+    values: np.ndarray,
+    cost_matrices: Dict[str, np.ndarray],
+    budgets: Dict[str, Optional[float]],
+    *,
+    elapsed_s: float = 0.0,
+    meta: Optional[Dict[str, Any]] = None,
+) -> SolveReport:
+    """Compose the audit from a solved instance (search.py's call site).
+
+    ``cost_matrices`` are the dense (L, C) cost grids keyed by constraint
+    name; ``budgets`` maps the same names to their budget (None for a
+    cost that was tracked but not constrained).
+    """
+    values = np.asarray(values, np.float64)
+    L = len(layers)
+    n = len(bits)
+    rows = np.arange(L)
+    choice = np.asarray(sol.choice, int)
+    iw, ja = np.divmod(choice, n)
+    used = {name: float(np.asarray(m, np.float64)[rows, choice].sum())
+            for name, m in cost_matrices.items()}
+    return SolveReport(
+        layers=[str(s) for s in layers],
+        bits=[int(b) for b in bits],
+        chosen_w=[int(bits[i]) for i in iw],
+        chosen_a=[int(bits[j]) for j in ja],
+        importance=[float(v) for v in values[rows, choice]],
+        candidate_values=values.tolist(),
+        candidate_costs={k: np.asarray(m, np.float64).tolist()
+                         for k, m in cost_matrices.items()},
+        constraints=_constraint_rows(used, budgets),
+        objective=float(values[rows, choice].sum()),
+        solver=sol.method,
+        optimal=bool(sol.optimal),
+        elapsed_s=float(elapsed_s),
+        meta=dict(meta or {}),
+    )
+
+
+def describe_policy_report(qlayers, policy, bits: Sequence[int],
+                           n_tokens: int = 1,
+                           meta: Optional[Dict[str, Any]] = None
+                           ) -> SolveReport:
+    """Post-hoc audit for a policy that was NOT produced by a solve here
+    (the demo stand-in, a hand-written policy). Cost grids are the real
+    qspec accounting; importance is unknown (zeros); budgets are set to
+    the used costs, so slack is exactly 0 and the size constraint reads
+    as binding. ``meta.kind == "describe"`` marks the provenance.
+    """
+    from repro.core import qspec  # local import: keep ilp dependency-light
+
+    bits = [int(b) for b in bits]
+    n = len(bits)
+    L = len(qlayers)
+    values = np.zeros((L, n * n), np.float64)
+    cost_ops = np.zeros((L, n * n), np.float64)
+    cost_size = np.zeros((L, n * n), np.float64)
+    choice = np.zeros(L, int)
+    for l, q in enumerate(qlayers):
+        for i, bw in enumerate(bits):
+            for j, ba in enumerate(bits):
+                cost_ops[l, i * n + j] = qspec.bitops(q, bw, ba, n_tokens)
+                cost_size[l, i * n + j] = qspec.model_bits(q, bw)
+        choice[l] = (bits.index(policy.w_bits[q.name]) * n
+                     + bits.index(policy.a_bits[q.name]))
+    rows = np.arange(L)
+    sol = MCKPSolution(choice, 0.0, float(cost_size[rows, choice].sum()),
+                       float(cost_size[rows, choice].sum()),
+                       method="describe", optimal=False)
+    budgets = {"bitops": None,
+               "size_bits": float(cost_size[rows, choice].sum())}
+    m = {"kind": "describe"}
+    m.update(meta or {})
+    return build_solve_report(
+        [q.name for q in qlayers], bits, sol, values,
+        {"bitops": cost_ops, "size_bits": cost_size}, budgets, meta=m)

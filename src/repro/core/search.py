@@ -35,6 +35,7 @@ class SearchResult:
     elapsed_s: float
     solver: str
     optimal: bool
+    report: Optional[ilp.SolveReport] = None  # the ILP audit trail
 
 
 def reverse_indicators(qlayers: Sequence[QLayer],
@@ -100,6 +101,19 @@ def search_policy(
                              method=method)
     elapsed = time.perf_counter() - t0
 
+    report = ilp.build_solve_report(
+        [q.name for q in qlayers], [int(b) for b in bits], sol, values,
+        {"bitops": cost_ops, "size_bits": cost_size},
+        {"bitops": bitops_budget,
+         "size_bits": (size_budget_bytes * 8.0
+                       if size_budget_bytes is not None else None)},
+        elapsed_s=elapsed,
+        meta={
+            "kind": "ilp-reversed" if reverse else "ilp",
+            "alpha": alpha,
+            "n_tokens": n_tokens,
+        },
+    )
     policy = MPQPolicy.from_choice(
         qlayers, sol.choice, bits,
         meta={
@@ -109,6 +123,7 @@ def search_policy(
             "size_budget_bytes": size_budget_bytes,
             "solver": sol.method,
             "elapsed_s": elapsed,
+            "solve_report": report.to_json(),
         },
     )
     return SearchResult(
@@ -119,6 +134,7 @@ def search_policy(
         elapsed_s=elapsed,
         solver=sol.method,
         optimal=sol.optimal,
+        report=report,
     )
 
 

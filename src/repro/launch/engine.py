@@ -94,7 +94,9 @@ from repro.launch.scheduler import (
 from repro.models import attention as attn
 from repro.models import lm
 from repro.runtime import kv_cache as qkv
+from repro.obs import health as obs_health
 from repro.obs import metrics as obs_metrics
+from repro.obs import monitor as obs_monitor
 from repro.obs import trace as obs_trace
 
 
@@ -116,6 +118,7 @@ class EngineConfig:
     bucket_prompts: bool = False  # pow-2 prompt padding to bound re-jits
     bucket_min: int = 8  # smallest prompt bucket
     trace: bool = True  # record the per-request lifecycle event trace
+    health_every: int = 4  # KV-scale drift sample stride (decode steps; 0 off)
 
 
 @dataclasses.dataclass
@@ -142,7 +145,10 @@ class EngineStats:
     completed: int = 0
     tokens_generated: int = 0
     prefill_flops_saved: float = 0.0  # MACs*2 skipped via shared-prefix pages
+    prefix_hit_tokens: int = 0  # prompt tokens served by page-table remaps
     kv_unique_pages: int = 0  # paged layout: distinct physical pages mapped
+    admissions_deferred_pool: int = 0  # admit rounds held on page pressure
+    alerts_fired: int = 0  # monitor threshold trips this epoch
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
     latency: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -527,6 +533,24 @@ class DecodeEngine:
             ).set(self.adapter.packed_bytes())
         if hasattr(self.adapter, "scale_bytes"):
             m.gauge("engine.scale_bytes").set(self.adapter.scale_bytes())
+        # pack-time quantization health (QuantizedSession computes it once
+        # at build from the materialized weights; publishing per epoch keeps
+        # every registry self-contained for snapshots/streaming)
+        pack_health = getattr(self.adapter, "pack_health", None)
+        if pack_health:
+            obs_health.publish_pack_health(m, pack_health)
+        self._kv_drift = obs_health.KVScaleDrift()
+        # threshold watchers: alerts land in this registry (alerts.fired)
+        # and, as `alert` instants, in the trace. The pool watcher reads
+        # available pages (free + LRU-evictable) — free_count alone would
+        # cry wolf whenever the prefix registry is merely full, while an
+        # admission could still evict its way to a full slot's pages.
+        self.monitor = obs_monitor.default_monitor(
+            pool_min_free=(self._pages_per_slot - 1) if self._paged else None
+        )
+        # optional per-iteration callback (serve --metrics-stream); survives
+        # reset() so a streamer set up once covers every epoch
+        self.on_step = getattr(self, "on_step", None)
 
     def _set_cache_gauges(self) -> None:
         """Resident KV-cache inventory gauges (int8 caches; fp caches have
@@ -543,6 +567,17 @@ class DecodeEngine:
                 "engine.kv_unique_pages",
                 help="distinct physical pages currently referenced",
             ).set(self.pool.unique_pages_in_use)
+            self._set_pool_gauges()
+
+    def _set_pool_gauges(self) -> None:
+        m = self.metrics
+        m.gauge(
+            "engine.kv_pool_free_pages", help="PagePool free-list length"
+        ).set(self.pool.free_count)
+        m.gauge(
+            "engine.kv_pool_available_pages",
+            help="free + LRU-evictable pages (admission headroom)",
+        ).set(self.pool.available_count)
 
     @property
     def stats(self) -> EngineStats:
@@ -573,7 +608,12 @@ class DecodeEngine:
             completed=c("completed"),
             tokens_generated=c("tokens_generated"),
             prefill_flops_saved=m.value("engine.prefill_flops_saved"),
+            prefix_hit_tokens=c("prefix_hit_tokens"),
             kv_unique_pages=c("kv_unique_pages"),
+            admissions_deferred_pool=int(
+                m.value("scheduler.admissions_deferred_pool")
+            ),
+            alerts_fired=int(m.value(obs_monitor.ALERTS_FIRED)),
             t_prefill_s=m.value("engine.t_prefill_s"),
             t_decode_s=m.value("engine.t_decode_s"),
             latency=lat,
@@ -664,6 +704,14 @@ class DecodeEngine:
         ids[: len(freed)] = freed
         self.state = self._free_pages(self.state, jnp.asarray(ids))
 
+    def _matmul_route(self) -> str:
+        """The packed-matmul impl serving this engine's traces, for
+        latency attribution (dispatch counts routes at trace time; the
+        executed graph runs the dominant one)."""
+        from repro.runtime import dispatch as _dispatch
+
+        return _dispatch.dominant_route(self.metrics)
+
     def _occupied(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
@@ -697,6 +745,7 @@ class DecodeEngine:
             m.gauge("engine.kv_unique_pages").set(
                 self.pool.unique_pages_in_use
             )
+            self._set_pool_gauges()
         if self.trace is not None:
             ts = self.trace.now()
             track = obs_trace.req_track(rid)
@@ -794,11 +843,13 @@ class DecodeEngine:
             )
         m.gauge("engine.prefill_compiles").set(len(self._prefill_shapes))
         m.gauge("engine.kv_unique_pages").set(pool.unique_pages_in_use)
+        self._set_pool_gauges()
         m.gauge("engine.act_quant_reused").set(
             getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
         )
         m.histogram("engine.prefill_ms").observe(dt * 1e3)
         m.histogram("engine.ttft_ms").observe(dt * 1e3)
+        obs_health.attribute_latency(m, "matmul", self._matmul_route(), dt)
         self.slots[idx] = _Slot(req, first, now, ts_admit, ts_admit + dt)
         m.gauge("engine.slot_occupancy").set(len(self._occupied()))
         if self.trace is not None:
@@ -813,6 +864,19 @@ class DecodeEngine:
                 prefix_hit_tokens=hit_tokens,
                 iteration=now,
             )
+            if hit_tokens:
+                # a remap is NOT a prefill: the explicit event carries what
+                # the page-table hit skipped so reconcile can tell a shared
+                # prefix from a suspiciously fast prefill span
+                self.trace.instant(
+                    "prefix_hit",
+                    track=track,
+                    ts=ts_admit,
+                    rid=req.rid,
+                    pages_reused=len(shared),
+                    tokens=hit_tokens,
+                    flops_saved=hit_tokens * self._flops_per_token,
+                )
             self.trace.span(
                 "prefill",
                 ts_admit,
@@ -878,6 +942,7 @@ class DecodeEngine:
         # admitted request IS the fenced prefill duration (queue wait is the
         # scheduler's ledger, not the engine's)
         m.histogram("engine.ttft_ms").observe(dt * 1e3)
+        obs_health.attribute_latency(m, "matmul", self._matmul_route(), dt)
         self.slots[idx] = _Slot(req, first, now, ts_admit, ts_admit + dt)
         m.gauge("engine.slot_occupancy").set(len(self._occupied()))
         if self.trace is not None:
@@ -938,6 +1003,12 @@ class DecodeEngine:
             getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
         )
         m.histogram("engine.decode_step_ms").observe(dt * 1e3)
+        obs_health.attribute_latency(m, "decode_attn", self.decode_attn_route, dt)
+        # KV-scale drift: sampled host-side from the already-fenced state
+        # (materialized write-time scales), so the jitted graph never sees it
+        he = self.ecfg.health_every
+        if he and int(m.value("engine.decode_steps")) % he == 0:
+            self._kv_drift.publish(m, self._kv_drift.update(self.state))
         ts1 = self.trace.now() if self.trace is not None else time.perf_counter()
         if self.trace is not None:
             self.trace.span(
@@ -974,7 +1045,16 @@ class DecodeEngine:
                 for i in occ:
                     self._finish(i, now)
         if self.scheduler.has_pending():
-            picks = self.scheduler.admit(now, self._free(), len(self._occupied()))
+            # paged KV: hand the scheduler the pool's worst-case obtainable
+            # pages so it defers (FIFO) rather than letting an admission
+            # race the pool into exhaustion mid-prefill
+            picks = self.scheduler.admit(
+                now,
+                self._free(),
+                len(self._occupied()),
+                page_budget=self.pool.available_count if self._paged else None,
+                page_need=self._pages_per_slot if self._paged else 0,
+            )
             for req, idx in picks:
                 self._admit(req, idx, now)
         if any(s is not None and not s.done for s in self.slots):
@@ -984,6 +1064,9 @@ class DecodeEngine:
         elif not self.scheduler.has_pending():
             return False
         self.metrics.counter("engine.iterations").inc()
+        self.monitor.check(self.metrics, self.trace)
+        if self.on_step is not None:
+            self.on_step(self.metrics)
         return True
 
     def run(self) -> Dict[int, Completion]:

@@ -144,9 +144,25 @@ class Scheduler:
         return self.policy == "fixed"
 
     def admit(
-        self, now: int, free_slots: List[int], occupied: int
+        self,
+        now: int,
+        free_slots: List[int],
+        occupied: int,
+        page_budget: Optional[int] = None,
+        page_need: int = 0,
     ) -> List[Tuple[Request, int]]:
-        """Return [(request, slot)] to admit at iteration ``now``."""
+        """Return [(request, slot)] to admit at iteration ``now``.
+
+        ``page_budget``/``page_need`` are the paged-KV pressure check:
+        the engine passes the pool's worst-case obtainable pages
+        (``PagePool.available_count``, free + LRU-evictable) and one
+        admission's worst-case page need. Continuous policies stop
+        admitting once the next admission could exhaust the pool —
+        deferring FIFO order rather than skipping ahead — and count each
+        deferral round in ``scheduler.admissions_deferred_pool``. The
+        fixed policy admits whole rounds into a pool sized for all
+        slots, so it ignores the budget.
+        """
         if self.policy == "fixed":
             if occupied:
                 return []
@@ -165,9 +181,20 @@ class Scheduler:
             self._credit = 0
         out: List[Tuple[Request, int]] = []
         free = list(free_slots)
+        budget = page_budget
         for r in arrived:
             if not free or self._credit < r.prompt_len:
                 break
+            if budget is not None and page_need > budget:
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "scheduler.admissions_deferred_pool",
+                        help="admission rounds deferred on page-pool "
+                        "pressure",
+                    ).inc()
+                break
+            if budget is not None:
+                budget -= page_need
             self._credit -= r.prompt_len
             out.append((r, free.pop(0)))
         self._drop([r for r, _ in out])

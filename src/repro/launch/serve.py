@@ -93,6 +93,7 @@ class ServeConfig:
     decode_attn: str = "auto"   # auto | a dispatch decode_attn route
     mesh: Optional[str] = None
     bucket: bool = True         # prompt-length bucketing (ring only)
+    chip_table: Optional[str] = None  # measured device table json (roofline)
     seed: int = 0
 
     def __post_init__(self):
@@ -132,24 +133,45 @@ class ServeConfig:
             stagger=args.stagger, arrive_every=args.arrive_every,
             policy_path=args.policy, kv=args.kv, kv_layout=args.kv_layout,
             page_size=args.page_size, decode_attn=args.decode_attn,
-            mesh=args.mesh, bucket=not args.no_bucket, seed=args.seed)
+            mesh=args.mesh, bucket=not args.no_bucket,
+            chip_table=args.chip_table, seed=args.seed)
+
+    @property
+    def chip(self):
+        """``--chip-table`` resolved to a calibrated ``ChipSpec`` (cached);
+        None without a table. Accepts either a bare device-table stanza or
+        a whole ``benchmarks/roofline_calibration.py`` bench JSON (the
+        ``device_table`` key)."""
+        if self.chip_table is None:
+            return None
+        if not hasattr(self, "_chip"):
+            self._chip = load_chip_table(self.chip_table)
+        return self._chip
 
     def engine_config(self, *, kv_quant: Optional[str] = None,
                       schedule: Optional[str] = None,
-                      layout: Optional[str] = None) -> EngineConfig:
+                      layout: Optional[str] = None,
+                      calibrated: bool = True) -> EngineConfig:
         """An ``EngineConfig`` for one engine of this serving run.
 
         ``kv_quant`` defaults to the packed session's storage mode; a
         non-int8 engine (the fp path, the fake-quant reference) silently
-        serves through the ring layout — paged pages hold int8 codes."""
+        serves through the ring layout — paged pages hold int8 codes.
+        ``calibrated=False`` keeps the default ``ChipSpec`` even when a
+        ``--chip-table`` is loaded — reference engines budget with the
+        stock envelope, so the smoke's token-identity gate doubles as the
+        calibrated-vs-default agreement check."""
         kv = self.session_kv if kv_quant is None else kv_quant
         lay = self.kv_layout if layout is None else layout
         if kv != "int8":
             lay = "ring"
-        return EngineConfig(
+        ecfg = EngineConfig(
             slots=self.slots, cache_len=self.resolved_cache_len,
             policy=schedule or self.schedule, kv_quant=kv, kv_layout=lay,
             page_size=self.page_size, bucket_prompts=self.bucket)
+        if calibrated and self.chip is not None:
+            ecfg = dataclasses.replace(ecfg, chip=self.chip)
+        return ecfg
 
 
 def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0,
@@ -181,15 +203,37 @@ def build_requests(data, n, prompt_len, gen, *, stagger=False, arrive_every=0,
     return reqs
 
 
+def load_chip_table(path: str):
+    """``--chip-table`` loader: a measured device-table json ->
+    calibrated ``ChipSpec``. Accepts the bench JSON written by
+    ``benchmarks/roofline_calibration.py`` (nested ``device_table`` key)
+    or a bare table stanza."""
+    import json
+
+    from repro.dist import roofline
+
+    with open(path) as f:
+        table = json.load(f)
+    if "device_table" in table:
+        table = table["device_table"]
+    try:
+        return roofline.chip_from_table(table)
+    except ValueError as e:
+        raise SystemExit(f"--chip-table {path}: {e}")
+
+
 def run_engine(params, cfg, bits, ctx, reqs, *, scfg: ServeConfig, schedule,
-               eng=None, axes=NO_AXES):
+               eng=None, axes=NO_AXES, calibrated=True, on_step=None):
     """Run one request set; pass ``eng`` to reuse its compiled functions
     (reset under the new schedule instead of paying a full re-jit)."""
     if eng is None:
-        ecfg = scfg.engine_config(kv_quant="none", schedule=schedule)
+        ecfg = scfg.engine_config(kv_quant="none", schedule=schedule,
+                                  calibrated=calibrated)
         eng = DecodeEngine(params, cfg, bits, ctx, axes, ecfg)
     else:
         eng.reset(schedule)
+    if on_step is not None:
+        eng.on_step = on_step
     eng.submit_all(reqs)
     completions = eng.run()
     return eng, completions
@@ -212,6 +256,9 @@ def print_stats(label, eng):
         v = d[k]
         num = f"{v:.3f}" if isinstance(v, float) else str(v)
         print(f"  {k:<{width}}  {num}")
+    for a in eng.monitor.alerts:
+        print(f"  ALERT[{a.severity}] {a.name}: {a.metric} {a.op} "
+              f"{a.threshold:g} (value {a.value:g})")
 
 
 def export_obs(args, eng):
@@ -236,6 +283,87 @@ def export_obs(args, eng):
         with open(args.metrics_out, "w") as f:
             json.dump(eng.metrics.snapshot(), f, indent=1, sort_keys=True)
         print(f"metrics: {len(eng.metrics)} series -> {args.metrics_out}")
+
+
+def make_streamer(args):
+    """``--metrics-stream``: build the JSONL snapshot streamer (or None).
+    Hook it onto an engine with ``eng.on_step = streamer.tick`` — the
+    engine calls it once per scheduler iteration."""
+    path = getattr(args, "metrics_stream", None)
+    if not path:
+        return None
+    import os
+
+    from repro.obs.export import MetricsStreamer
+
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    return MetricsStreamer(path,
+                           interval_s=float(args.metrics_interval))
+
+
+def attach_stream(args, eng):
+    """Build + hook a streamer on one engine (the --policy path)."""
+    streamer = make_streamer(args)
+    if streamer is not None:
+        eng.on_step = streamer.tick
+    return streamer
+
+
+def finish_stream(args, eng, streamer):
+    """Close the JSONL stream (force-emitting a final snapshot, so every
+    run yields >= 2 snapshots) and drop a Prometheus text dump of the
+    same registry next to it (``<path>.prom``)."""
+    if streamer is None:
+        return
+    from repro.obs.export import write_prometheus
+
+    streamer.close(eng.metrics)
+    prom = args.metrics_stream + ".prom"
+    text = write_prometheus(eng.metrics, prom)
+    print(f"metrics stream: {streamer.seq} snapshots -> "
+          f"{args.metrics_stream} | {len(text.splitlines())} prometheus "
+          f"lines -> {prom}")
+
+
+def explain_policy(args, cfg):
+    """``--explain-policy``: render the ILP audit trail of ``--policy``
+    as a per-layer table (importance, chosen bits, bytes, binding
+    constraint) and exit. The report comes from the policy's embedded
+    ``SolveReport`` (``core.search.search_policy`` and
+    ``demo_mixed_policy`` both embed one; serving bundles carry it in
+    ``meta["solve_report"]``); a policy without one gets a descriptive
+    report rebuilt from the bit assignment (zero importance, measured
+    costs). A PATH argument also writes the report JSON there — the CI
+    artifact."""
+    from repro.core import ilp
+
+    policy = MPQPolicy.load(args.policy)
+    raw = (policy.meta or {}).get("solve_report")
+    if raw is not None:
+        report = ilp.SolveReport.from_json(raw)
+    else:
+        ql = lm.enumerate_qlayers(cfg)
+        try:
+            policy.validate(ql)
+        except ValueError as e:
+            raise SystemExit(
+                f"--explain-policy: {args.policy} has no embedded "
+                f"solve_report and does not match arch {cfg.name!r} "
+                f"(did you mix --smoke and full variants?): {e}")
+        report = ilp.describe_policy_report(
+            ql, policy, sorted(int(b) for b in cfg.bits),
+            meta={"arch": cfg.name, "policy_path": args.policy})
+    print(report.render_table())
+    if args.explain_policy != "-":
+        import os
+        d = os.path.dirname(args.explain_policy)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        report.save(args.explain_policy)
+        print(f"solve report -> {args.explain_policy}")
+    return report
 
 
 def check_trace(eng, label):
@@ -267,6 +395,15 @@ def calibration_report(eng, cfg, *, gate=False):
     t = report["device_table"]
     print(f"  measured device table: hbm_bytes_s={t['hbm_bytes_s']:.3e} "
           f"peak_flops={t['peak_flops']:.3e} ({t['name']})")
+    # publish the worst modeled-vs-measured factor so the drift watcher
+    # (obs.monitor.roofline_drift_watcher) can trip on it; the gauge only
+    # exists once a calibration ran, so non-calibrating runs never alert
+    from repro.obs import health as obs_health
+    drift = obs_health.roofline_drift(report["rows"])
+    eng.metrics.gauge(
+        "roofline.drift_max",
+        help="worst modeled-vs-measured phase cost factor").set(drift)
+    eng.monitor.check(eng.metrics, eng.trace)
     if gate and not report["finite"]:
         raise SystemExit("roofline calibration produced a non-finite or "
                          f"non-positive ratio: {report['rows']}")
@@ -279,13 +416,22 @@ def demo_mixed_policy(cfg, meta=None):
     ``--policy`` smoke and ``benchmarks/quant_serve_bench.py`` (whose
     checked-in baseline pins the exact bit assignment) must share this one
     builder."""
+    from repro.core import ilp
+
     ql = lm.enumerate_qlayers(cfg)
     bits = sorted(int(b) for b in cfg.bits)
     n = len(bits)
-    return MPQPolicy(
+    policy = MPQPolicy(
         {q.name: bits[i % n] for i, q in enumerate(ql)},
         {q.name: bits[(i + 1) % n] for i, q in enumerate(ql)},
         meta=dict(meta or {}, kind="demo-mixed", arch=cfg.name))
+    # embed a descriptive SolveReport (zero importance, real costs) so
+    # --write-demo-policy + --explain-policy renders without a search
+    report = ilp.describe_policy_report(ql, policy, bits,
+                                        meta={"kind": "demo-mixed",
+                                              "arch": cfg.name})
+    policy.meta["solve_report"] = report.to_json()
+    return policy
 
 
 def write_demo_policy(path, arch="limpq-demo", smoke=True):
@@ -336,6 +482,7 @@ def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
                             kv_quant=kv)
     eng = DecodeEngine(sess.params, cfg, None, ctx, axes,
                        scfg.engine_config(), adapter=sess)
+    streamer = attach_stream(args, eng)
     eng.submit_all(reqs)
     completions = eng.run()
     # counters (prefill shapes compiled, act quantizes reused, routes, ...)
@@ -346,6 +493,9 @@ def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
     if args.smoke:
         check_trace(eng, "quantized")
         calibration_report(eng, cfg, gate=True)
+    # close AFTER the calibration gauge lands, so the final snapshot and
+    # the prometheus dump carry the full signal plane
+    finish_stream(args, eng, streamer)
     s = summarize(sess)
     print(f"packed weights: {s['packed_bytes']} B "
           f"(+{s['scale_bytes']} B scales) vs policy accounting "
@@ -398,8 +548,11 @@ def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
         # reference: the fake-quant training graph (scanned body) through
         # the same engine; int8 slots reference as quantize-dequantize fp
         bits = lm.bits_from_policy(cfg, policy)
+        # calibrated=False: the reference budgets with the default chip,
+        # so this token gate is ALSO the calibrated-vs-default agreement
+        # check when a --chip-table is loaded
         ref_ecfg = scfg.engine_config(
-            kv_quant="fake" if kv == "int8" else "none")
+            kv_quant="fake" if kv == "int8" else "none", calibrated=False)
         ref = DecodeEngine(params, cfg, bits, ctx, NO_AXES, ref_ecfg)
         ref.submit_all(reqs)
         ref_out = ref.run()
@@ -410,6 +563,10 @@ def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
                              f"reference graph: rids {mismatch}")
         print("greedy tokens identical with the fake-quant reference graph "
               f"({len(completions)} requests)")
+        if scfg.chip is not None:
+            print(f"chip-table {scfg.chip_table}: calibrated prefill chunk "
+                  f"{eng.prefill_chunk} vs default {ref.prefill_chunk} — "
+                  "tokens identical, only the budget differs")
         ratio = s["packed_vs_policy"]
         if args.smoke and abs(ratio - 1.0) > 0.05:
             raise SystemExit(
@@ -461,6 +618,25 @@ def main(argv=None):
                          "xla_force_host_platform_device_count=8)")
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable prompt-length bucketing (--policy path)")
+    ap.add_argument("--chip-table", default=None, metavar="JSON",
+                    help="measured device table (the bench JSON written by "
+                         "benchmarks/roofline_calibration.py, or a bare "
+                         "device-table stanza): budget the serving engine "
+                         "with the calibrated ChipSpec instead of the "
+                         "default envelope")
+    ap.add_argument("--explain-policy", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="render the --policy's ILP audit trail "
+                         "(SolveReport: per-layer importance, chosen bits, "
+                         "bytes, binding constraint) as a table and exit; "
+                         "a PATH argument also writes the report json")
+    ap.add_argument("--metrics-stream", default=None, metavar="PATH",
+                    help="append periodic JSONL metric snapshots while "
+                         "serving (one {ts, seq, metrics} object per line); "
+                         "a Prometheus text dump of the final registry "
+                         "lands at PATH.prom")
+    ap.add_argument("--metrics-interval", type=float, default=0.5,
+                    help="seconds between --metrics-stream snapshots")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the request-lifecycle trace of the measured "
                          "run: .jsonl = one event per line, anything else = "
@@ -478,6 +654,14 @@ def main(argv=None):
         # written for the same variant (--smoke or full) it will serve
         write_demo_policy(args.write_demo_policy, args.arch,
                           smoke=args.smoke)
+        return
+
+    if args.explain_policy is not None:
+        if not args.policy:
+            raise SystemExit("--explain-policy needs --policy <json> (the "
+                             "report explains a concrete bit assignment)")
+        cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+        explain_policy(args, cfg)
         return
 
     if args.smoke:
@@ -545,8 +729,10 @@ def main(argv=None):
         # report steady-state throughput (serve_bench does the same)
         eng, _ = run_engine(params, cfg, bits, ctx, reqs, scfg=scfg,
                             schedule=scfg.schedule, axes=axes)
+    streamer = make_streamer(args)
     eng, completions = run_engine(params, cfg, bits, ctx, reqs, scfg=scfg,
-                                  schedule=scfg.schedule, eng=eng, axes=axes)
+                                  schedule=scfg.schedule, eng=eng, axes=axes,
+                                  on_step=streamer.tick if streamer else None)
     cont_stats = eng.stats      # reset() below replaces, not mutates, this
     print_stats(args.schedule, eng)
     # obs artifacts + gates come from THIS measured epoch, before the
@@ -555,12 +741,20 @@ def main(argv=None):
     if args.smoke:
         check_trace(eng, args.schedule)
         calibration_report(eng, cfg, gate=True)
+    finish_stream(args, eng, streamer)
     r0 = completions[0]
     print(f"generated[rid=0] ({r0.prompt_len}-token prompt):", r0.tokens)
 
     if args.compare and args.schedule != "fixed":
+        # with a --chip-table loaded, the fixed-path comparison engine is
+        # built fresh on the DEFAULT chip (calibrated=False): its token
+        # gate then proves the calibrated budget changed only the chunk
+        # sizes, never the tokens
+        fresh_default = scfg.chip is not None
         fixed, fixed_out = run_engine(params, cfg, bits, ctx, reqs, scfg=scfg,
-                                      schedule="fixed", eng=eng)
+                                      schedule="fixed",
+                                      eng=None if fresh_default else eng,
+                                      axes=axes, calibrated=False)
         print_stats("fixed", fixed)
         mismatch = [r.rid for r in completions.values()
                     if fixed_out[r.rid].tokens != r.tokens]
@@ -569,6 +763,10 @@ def main(argv=None):
         saved = fixed.stats.decode_steps - cont_stats.decode_steps
         print(f"token-identical with fixed batch; {saved} decode steps saved "
               f"({cont_stats.decode_steps} vs {fixed.stats.decode_steps})")
+        if fresh_default:
+            print(f"chip-table {scfg.chip_table}: calibrated prefill chunk "
+                  f"{eng.prefill_chunk} vs default {fixed.prefill_chunk} — "
+                  "tokens identical, only the budget differs")
         if args.smoke and args.stagger and saved <= 0:
             raise SystemExit("continuous batching saved no decode steps on a "
                              "staggered schedule")

@@ -1,24 +1,49 @@
 """repro.obs — observability for the quantized serving stack.
 
-Three pieces, all zero-dependency (stdlib + the repo only):
+Six pieces, all zero-dependency (stdlib + numpy + the repo only):
 
 * ``obs.metrics``   — a metrics registry (monotonic counters, gauges,
   fixed-bucket histograms, snapshot-to-dict). The engine, scheduler,
   session, dispatch and KV cache report through one registry instead of
   mutating ad-hoc stat fields.
 * ``obs.trace``     — per-request lifecycle event traces
-  (admit → prefill → first-token → decode ticks → complete/evict) with
-  fenced ``time.perf_counter`` timestamps, exportable as JSONL or
-  Chrome-trace/Perfetto JSON (``serve --trace-out``).
+  (admit → prefix_hit → prefill → first-token → decode ticks →
+  complete/evict) with fenced ``time.perf_counter`` timestamps,
+  exportable as JSONL or Chrome-trace/Perfetto JSON
+  (``serve --trace-out``).
 * ``obs.calibrate`` — replays measured per-phase engine timings against
   the ``dist.roofline`` step-cost model and emits a measured-vs-modeled
   table plus a device-table stanza the ``ChipSpec`` can be updated from
   (``benchmarks/roofline_calibration.py``).
+* ``obs.health``    — quantization health computed host-side from
+  already-materialized artifacts: pack-time code saturation and scale
+  utilization per site, KV-scale drift across decode ticks, per-route
+  dispatch latency attribution, roofline drift. Never touches the
+  jitted graph, so greedy-token identity is untouched.
+* ``obs.export``    — Prometheus text exposition of a registry snapshot
+  plus a periodic JSONL snapshot streamer
+  (``serve --metrics-stream``).
+* ``obs.monitor``   — threshold watchers over the registry raising
+  structured ``Alert`` records into the trace and the engine stats
+  (page-pool pressure, saturation ceiling, roofline drift).
 """
+from repro.obs.export import (  # noqa: F401
+    MetricsStreamer,
+    parse_prometheus_text,
+    prometheus_text,
+    read_jsonl_snapshots,
+    write_prometheus,
+)
 from repro.obs.metrics import (  # noqa: F401
     Counter,
     Gauge,
     Histogram,
     MetricsRegistry,
+)
+from repro.obs.monitor import (  # noqa: F401
+    Alert,
+    Monitor,
+    Watcher,
+    default_monitor,
 )
 from repro.obs.trace import TraceRecorder  # noqa: F401

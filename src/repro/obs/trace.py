@@ -37,8 +37,13 @@ TRACE_SCHEMA_VERSION = 1
 
 ENGINE_TRACK = "engine"
 
-# per-request lifecycle vocabulary, in lifecycle order
-REQUEST_EVENTS = ("admit", "first_token", "token", "complete", "evict")
+# per-request lifecycle vocabulary, in lifecycle order. ``prefix_hit`` is
+# optional (paged layout only): it marks an admission that re-mapped shared
+# prefix pages instead of prefilling them, carrying pages_reused / tokens /
+# flops_saved — without it a shared-prefix admission is indistinguishable
+# from a suspiciously fast prefill in the trace.
+REQUEST_EVENTS = ("admit", "prefix_hit", "first_token", "token",
+                  "complete", "evict")
 # events that each carry exactly one emitted token
 TOKEN_EVENTS = ("first_token", "token")
 
@@ -222,6 +227,27 @@ def reconcile(rec: TraceRecorder, stats: Dict[str, Any],
     prefill_spans = [e for e in rec.events if e.name == "prefill"]
     close(sum(e.dur for e in prefill_spans), stats.get("t_prefill_s", 0.0),
           "sum(prefill dur) != t_prefill_s")
+
+    # prefix-hit admissions are page-table remaps, NOT prefills: the
+    # explicit prefix_hit events must account for exactly the tokens and
+    # FLOPs the counters say were saved, and every admit that reports
+    # reused prefix tokens must have one — otherwise the trace would
+    # under-count what the paged path skipped.
+    hits = [e for e in rec.events if e.name == "prefix_hit"]
+    hit_tokens = sum(int(e.args.get("tokens", 0)) for e in hits)
+    if hit_tokens != stats.get("prefix_hit_tokens", 0):
+        problems.append(f"prefix_hit tokens {hit_tokens} != "
+                        f"prefix_hit_tokens {stats.get('prefix_hit_tokens')}")
+    close(sum(float(e.args.get("flops_saved", 0.0)) for e in hits),
+          stats.get("prefill_flops_saved", 0.0),
+          "sum(prefix_hit flops_saved) != prefill_flops_saved")
+    hit_tracks = {e.track for e in hits}
+    for e in rec.events:
+        if (e.name == "admit" and e.args.get("prefix_hit_tokens", 0)
+                and e.track not in hit_tracks):
+            problems.append(f"{e.track}: admit reused "
+                            f"{e.args['prefix_hit_tokens']} prefix tokens "
+                            f"but has no prefix_hit event")
 
     reqs = request_summaries(rec.events)
     tokens = sum(r["tokens"] for r in reqs.values())

@@ -162,6 +162,21 @@ def _count_route(family: str, route: str) -> None:
         reg.counter(f"dispatch.{family}.{route}").inc()
 
 
+def dominant_route(registry, family: str = "route") -> str:
+    """Most-counted ``dispatch.<family>.*`` impl in a registry ("fp" when
+    nothing was counted). Route counts are per trace; the engine uses this
+    to attribute its measured phase latencies to the impl that actually
+    serves the compiled graph (``obs.health.attribute_latency``)."""
+    prefix = f"dispatch.{family}."
+    best, best_count = "fp", 0.0
+    for name in getattr(registry, "_metrics", {}):
+        if name.startswith(prefix):
+            v = registry.value(name)
+            if v > best_count:
+                best, best_count = name[len(prefix):], v
+    return best
+
+
 def _w_contracted_dims(eqn: str):
     """Indices of the weight dims the einsum contracts away."""
     try:

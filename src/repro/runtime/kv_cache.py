@@ -638,6 +638,26 @@ class PagePool:
     def registered_prefixes(self) -> int:
         return len(self._registry)
 
+    @property
+    def reclaimable_count(self) -> int:
+        """Pages pinned ONLY by the prefix registry — the ones
+        ``alloc_with_freed`` could recover by dropping LRU prefixes.  A
+        page is reclaimable when its refcount equals its registry pins
+        (no slot maps it)."""
+        pins: Dict[int, int] = {}
+        for pages in self._registry.values():
+            for p in pages:
+                pins[p] = pins.get(p, 0) + 1
+        return sum(1 for p, k in pins.items() if self.refcount[p] == k)
+
+    @property
+    def available_count(self) -> int:
+        """Worst-case pages an admission could obtain: free pages plus
+        registry-only pages.  This — not ``free_count`` — is what the
+        scheduler's pressure check must compare against, otherwise a
+        pool full of evictable prefixes would defer admissions forever."""
+        return self.free_count + self.reclaimable_count
+
     def meta_bytes(self) -> int:
         """Resident bytes of the allocator's own state: the free list and
         the refcount array (one int32 each per page) — counted by

@@ -61,6 +61,7 @@ from repro.core.quantizer import (
 from repro.dist.axes import NO_AXES, MeshAxes
 from repro.models import lm
 from repro.models.quant_layers import QuantContext
+from repro.obs import health as obs_health
 from repro.runtime import packing
 
 Array = jax.Array
@@ -130,6 +131,11 @@ class QuantizedSession:
         self.sites = lm.iter_sites(cfg)
         self._lut = {int(b): i for i, b in enumerate(cfg.bits)}
         self.act_quant_reused = 0      # trace-time hits, see dispatch
+        # per-site pack-time health (saturation / scale utilization),
+        # computed host-side in _build_params from the materialized weights
+        # and the scales packing actually used; the engine publishes it
+        # into its registry each epoch (obs.health.publish_pack_health)
+        self.pack_health: Dict[str, Dict[str, float]] = {}
         # obs.metrics.MetricsRegistry shared by the engine (it assigns this
         # at build/reset): _forward binds it so dispatch counts the routes
         # each packed matmul resolves to, per trace
@@ -198,6 +204,10 @@ class QuantizedSession:
                         a_signed=self.cfg.quant_act_signed,
                         per_channel=self.per_channel,
                         shard_dim=sd, shard_count=sc)
+                    # health from the scale the packing actually used
+                    # (pl.scale covers both bank and per-channel modes)
+                    self.pack_health[q.name] = obs_health.site_health(
+                        leaf["w"], wb, pl.scale)
                     _set_path(sp, q.path, pl)
                     packed_paths.append(q.path)
                 else:

@@ -1,0 +1,449 @@
+"""Quantization health telemetry + live export + threshold monitor:
+pack-time saturation/utilization math, the Prometheus/JSONL export
+surfaces, edge-triggered alerting, KV-scale drift, latency attribution,
+and the scheduler's page-pool deferral — all host-side, none of it
+allowed to touch token identity (the serve smokes gate that end)."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core.quantizer import bit_range
+from repro.obs import export, health, monitor, trace
+from repro.obs.metrics import MetricsRegistry
+
+
+# ---------------------------------------------------------------------------
+# pack-time site health
+# ---------------------------------------------------------------------------
+def _self_calibrated(w, bits):
+    """Per-channel scales from the weights themselves (max|w| / qmax) —
+    'packed from its own calibration data', the zero-saturation case."""
+    qmax = bit_range(bits, True)[1]
+    return np.abs(w).max(axis=tuple(range(w.ndim - 1))) / qmax
+
+
+def test_site_health_zero_saturation_on_self_calibrated_scale():
+    rng = np.random.default_rng(0)
+    for bits in (2, 4, 8):
+        w = rng.normal(size=(16, 24)).astype(np.float32)
+        h = health.site_health(w, bits, _self_calibrated(w, bits))
+        assert h["saturation_rate"] == 0.0
+        assert h["n_saturated"] == 0
+        # the covering scale is tight: utilization ~1 by construction
+        assert h["scale_utilization"] == pytest.approx(1.0, rel=1e-5)
+        assert h["n_values"] == w.size and h["w_bits"] == bits
+
+
+def test_site_health_counts_clipped_values():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(32, 32)).astype(np.float32)
+    s = _self_calibrated(w, 4) * 0.25  # undersized scale -> clipping
+    h = health.site_health(w, 4, s)
+    assert h["saturation_rate"] > 0.0
+    assert h["scale_utilization"] > 1.0
+    assert h["n_saturated"] == round(h["saturation_rate"] * h["n_values"])
+
+
+def test_site_health_edge_values_not_saturated():
+    # a value landing exactly ON qmax rounds inside the grid: not clipped
+    qmax = bit_range(4, True)[1]
+    w = np.array([[1.0 * qmax, -1.0 * qmax, 0.5]])
+    h = health.site_health(w, 4, np.float32(1.0))
+    assert h["saturation_rate"] == 0.0
+    assert h["scale_utilization"] == pytest.approx(1.0)
+    # just past the round-boundary it IS clipped
+    h2 = health.site_health(np.array([[qmax + 0.51]]), 4, np.float32(1.0))
+    assert h2["n_saturated"] == 1
+
+
+def test_pack_summary_and_publish():
+    rng = np.random.default_rng(2)
+    sites = {}
+    for i, bits in enumerate((2, 4, 8)):
+        w = rng.normal(size=(8, 8)).astype(np.float32)
+        s = _self_calibrated(w, bits) * (0.5 if i == 0 else 1.0)
+        sites[f"L{i}.w"] = health.site_health(w, bits, s)
+    summary = health.pack_summary(sites)
+    assert summary["sites"] == 3
+    assert summary["saturation_rate_max"] == max(
+        h["saturation_rate"] for h in sites.values())
+    reg = MetricsRegistry()
+    published = health.publish_pack_health(reg, sites)
+    assert published == summary
+    assert reg.value("quant.saturation_rate_max") == \
+        summary["saturation_rate_max"]
+    assert reg.value("quant.scale_utilization_p50") == \
+        summary["scale_utilization_p50"]
+    for name in sites:
+        assert f"quant.saturation_rate.{name}" in reg
+    assert reg.get("quant.saturation_rate").count == 3
+    assert reg.get("quant.scale_utilization").count == 3
+
+
+def test_pack_summary_empty():
+    s = health.pack_summary({})
+    assert s["sites"] == 0 and s["saturation_rate_max"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# KV-scale drift
+# ---------------------------------------------------------------------------
+FakeCache = collections.namedtuple("FakeCache", ["k_scale", "v_scale"])
+
+
+def test_kv_scale_drift_tracks_population_mean():
+    d = health.KVScaleDrift()
+    tree = {"a": FakeCache(np.full((4, 8), 0.5, np.float32),
+                           np.full((4, 8), 0.5, np.float32))}
+    assert d.update(tree) is None           # first sample: no baseline
+    assert d.update(tree) == pytest.approx(0.0)   # stationary: ~0 drift
+    shifted = {"a": FakeCache(np.full((4, 8), 1.0, np.float32),
+                              np.full((4, 8), 1.0, np.float32))}
+    assert d.update(shifted) == pytest.approx(1.0)  # mean doubled
+    assert d.last["rows"] == 64
+    reg = MetricsRegistry()
+    d.publish(reg, 1.0)
+    assert reg.value("quant.kv_scale_mean") == pytest.approx(1.0)
+    assert reg.value("quant.kv_scale_drift_max") == pytest.approx(1.0)
+    d.publish(reg, 0.25)                     # running max keeps the worst
+    assert reg.value("quant.kv_scale_drift_max") == pytest.approx(1.0)
+
+
+def test_kv_scale_drift_ignores_zero_rows_and_fp_caches():
+    d = health.KVScaleDrift()
+    # unwritten rows hold scale 0 — they must not drag the mean down
+    half = np.zeros((2, 8), np.float32)
+    half[0] = 0.5
+    tree = [FakeCache(half, half), {"fp": np.zeros(3)}]
+    assert d.update(tree) is None
+    assert d.last["rows"] == 16              # only the nonzero rows
+    assert d.update({"empty": np.zeros(3)}) is None  # no caches at all
+
+
+# ---------------------------------------------------------------------------
+# latency attribution + roofline drift
+# ---------------------------------------------------------------------------
+def test_attribute_latency_routes_to_histograms():
+    reg = MetricsRegistry()
+    health.attribute_latency(reg, "matmul", "packed-int8", 0.002)
+    health.attribute_latency(reg, "matmul", "fp", 0.004)
+    health.attribute_latency(reg, "matmul", "packed-int8", 0.003)
+    h = reg.get("dispatch.latency_ms.matmul.packed-int8")
+    assert h.count == 2 and h.sum == pytest.approx(5.0)
+    assert reg.get("dispatch.latency_ms.matmul.fp").count == 1
+
+
+def test_roofline_drift_worst_factor_both_directions():
+    rows = [{"phase": "a", "ratio": 4.0}, {"phase": "b", "ratio": 0.1},
+            {"phase": "c", "ratio": float("nan")}]
+    assert health.roofline_drift(rows) == pytest.approx(10.0)
+    assert health.roofline_drift([]) == 1.0
+    assert health.roofline_drift([{"ratio": 1.0}]) == 1.0
+
+
+def test_dominant_route_from_registry():
+    from repro.runtime import dispatch
+    reg = MetricsRegistry()
+    assert dispatch.dominant_route(reg) == "fp"   # nothing counted yet
+    reg.counter("dispatch.route.fp").inc(2)
+    reg.counter("dispatch.route.packed-int8").inc(5)
+    assert dispatch.dominant_route(reg) == "packed-int8"
+    reg.counter("dispatch.decode_attn.fused-interpret").inc()
+    assert dispatch.dominant_route(reg, "decode_attn") == "fused-interpret"
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+def _demo_registry():
+    reg = MetricsRegistry()
+    reg.counter("engine.decode_steps", help="steps").inc(7)
+    reg.gauge("engine.kv_pool_free_pages").set(3)
+    h = reg.histogram("engine.decode_step_ms", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 9.0):
+        h.observe(v)
+    return reg
+
+
+def test_prometheus_text_parses_and_matches_snapshot():
+    reg = _demo_registry()
+    text = export.prometheus_text(reg)
+    samples = export.samples_as_dict(export.parse_prometheus_text(text))
+    assert samples["repro_engine_decode_steps_total"] == 7.0
+    assert samples["repro_engine_kv_pool_free_pages"] == 3.0
+    # histogram: cumulative buckets, +Inf == count, sum matches registry
+    buckets = samples["repro_engine_decode_step_ms_bucket"]
+    assert buckets[(("le", "1"),)] == 1.0
+    assert buckets[(("le", "2"),)] == 2.0
+    assert buckets[(("le", "4"),)] == 3.0
+    assert buckets[(("le", "+Inf"),)] == 4.0
+    assert samples["repro_engine_decode_step_ms_count"] == 4.0
+    snap = reg.snapshot()
+    assert samples["repro_engine_decode_step_ms_sum"] == \
+        pytest.approx(snap["engine.decode_step_ms"]["sum"])
+    assert samples["repro_engine_decode_steps_total"] == \
+        snap["engine.decode_steps"]
+    # help/type comment lines present
+    assert "# HELP repro_engine_decode_steps_total steps" in text
+    assert "# TYPE repro_engine_decode_step_ms histogram" in text
+
+
+def test_prometheus_line_format_is_strict():
+    export.parse_prometheus_text("ok_metric 1.0\n# comment\n")
+    with pytest.raises(ValueError):
+        export.parse_prometheus_text("bad metric line\n")
+    with pytest.raises(ValueError):
+        export.parse_prometheus_text('m{le=unquoted} 1\n')
+
+
+def test_prom_name_sanitizes_dots():
+    assert export.prom_name("engine.decode_steps") == \
+        "repro_engine_decode_steps"
+    assert export.prom_name("a-b c", prefix="") == "a_b_c"
+    # every emitted name must satisfy the prometheus grammar
+    reg = _demo_registry()
+    for name, _, _ in export.parse_prometheus_text(
+            export.prometheus_text(reg)):
+        assert export.prom_name(name, prefix="") == name
+
+
+def test_write_prometheus_round_trips(tmp_path):
+    reg = _demo_registry()
+    path = str(tmp_path / "m.prom")
+    text = export.write_prometheus(reg, path)
+    assert open(path).read() == text
+    assert export.parse_prometheus_text(text)
+
+
+# ---------------------------------------------------------------------------
+# JSONL metrics streamer
+# ---------------------------------------------------------------------------
+def test_streamer_emits_first_tick_and_close(tmp_path):
+    reg = _demo_registry()
+    path = str(tmp_path / "s.jsonl")
+    s = export.MetricsStreamer(path, interval_s=10.0)
+    assert s.tick(reg, now=0.0)          # first tick always emits
+    assert not s.tick(reg, now=1.0)      # inside the interval: gated
+    reg.counter("engine.decode_steps").inc()
+    s.close(reg, now=2.0)                # close force-emits the final state
+    snaps = export.read_jsonl_snapshots(path)
+    assert len(snaps) >= 2
+    assert [o["seq"] for o in snaps] == list(range(len(snaps)))
+    assert snaps[0]["metrics"]["engine.decode_steps"] == 7.0
+    assert snaps[-1]["metrics"]["engine.decode_steps"] == 8.0
+    assert not s.tick(reg)               # closed stream: inert
+
+
+def test_streamer_interval_gating(tmp_path):
+    reg = _demo_registry()
+    s = export.MetricsStreamer(str(tmp_path / "s.jsonl"), interval_s=0.5)
+    assert s.tick(reg, now=0.0)
+    assert not s.tick(reg, now=0.4)
+    assert s.tick(reg, now=0.5)          # interval elapsed
+    s.close(reg, now=0.6)
+    assert s.seq == 3
+    with pytest.raises(ValueError):
+        export.MetricsStreamer(str(tmp_path / "x.jsonl"), interval_s=-1)
+
+
+def test_read_jsonl_snapshots_rejects_gaps(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"ts": 0.0, "seq": 0, "metrics": {}}\n')
+        f.write('{"ts": 1.0, "seq": 2, "metrics": {}}\n')
+    with pytest.raises(ValueError):
+        export.read_jsonl_snapshots(path)
+    with open(path, "w") as f:
+        f.write('{"ts": 0.0, "seq": 0}\n')
+    with pytest.raises(ValueError):
+        export.read_jsonl_snapshots(path)
+
+
+# ---------------------------------------------------------------------------
+# threshold monitor
+# ---------------------------------------------------------------------------
+def test_watcher_fires_exactly_at_boundary():
+    reg = MetricsRegistry()
+    w = monitor.saturation_watcher(ceiling=0.25)
+    reg.gauge("quant.saturation_rate_max").set(0.2499)
+    assert w.evaluate(reg) is None
+    reg.gauge("quant.saturation_rate_max").set(0.25)   # inclusive: fires
+    assert w.evaluate(reg) == pytest.approx(0.25)
+    pool = monitor.pool_pressure_watcher(2.0)
+    reg.gauge("engine.kv_pool_available_pages").set(3)
+    assert pool.evaluate(reg) is None
+    reg.gauge("engine.kv_pool_available_pages").set(2)  # at the floor
+    assert pool.evaluate(reg) == pytest.approx(2.0)
+
+
+def test_watcher_skips_unregistered_metric():
+    reg = MetricsRegistry()
+    w = monitor.roofline_drift_watcher(8.0)
+    assert w.evaluate(reg) is None        # gauge never set: never fires
+    with pytest.raises(ValueError):
+        monitor.Watcher("bad", "m", "==", 1.0)
+
+
+def test_monitor_edge_triggered_alerts_into_registry_and_trace():
+    reg = MetricsRegistry()
+    rec = trace.TraceRecorder()
+    mon = monitor.Monitor([monitor.saturation_watcher(0.25)])
+    g = reg.gauge("quant.saturation_rate_max")
+
+    g.set(0.1)
+    assert mon.check(reg, rec) == []
+    g.set(0.3)
+    fired = mon.check(reg, rec, now=1.0)
+    assert len(fired) == 1
+    a = fired[0]
+    assert a.name == "saturation_ceiling" and a.severity == "critical"
+    assert a.value == pytest.approx(0.3) and a.ts == 1.0
+    # still violating: edge-triggered, no second alert
+    assert mon.check(reg, rec) == []
+    # clears, re-arms, fires again on the next violation
+    g.set(0.2)
+    assert mon.check(reg, rec) == []
+    g.set(0.4)
+    assert len(mon.check(reg, rec, now=2.0)) == 1
+    # alerts land in the registry counters...
+    assert reg.value(monitor.ALERTS_FIRED) == 2.0
+    assert reg.value(f"{monitor.ALERTS_FIRED}.saturation_ceiling") == 2.0
+    # ...in the monitor's own record...
+    assert mon.fired_count == 2
+    assert [d["value"] for d in mon.as_dicts()] == [
+        pytest.approx(0.3), pytest.approx(0.4)]
+    # ...and as instant events on the engine track of the trace
+    alerts = [e for e in rec.events if e.name == "alert"]
+    assert len(alerts) == 2
+    assert alerts[0].track == trace.ENGINE_TRACK
+    assert alerts[0].args["watcher"] == "saturation_ceiling"
+    assert alerts[0].args["metric"] == "quant.saturation_rate_max"
+
+
+def test_default_monitor_watcher_set():
+    mon = monitor.default_monitor()
+    assert {w.name for w in mon.watchers} == \
+        {"saturation_ceiling", "roofline_drift"}
+    mon = monitor.default_monitor(pool_min_free=1)
+    assert {w.name for w in mon.watchers} == \
+        {"saturation_ceiling", "roofline_drift", "pool_pressure"}
+
+
+# ---------------------------------------------------------------------------
+# scheduler page-pool deferral (pure python: no engine needed)
+# ---------------------------------------------------------------------------
+def test_scheduler_defers_admission_on_pool_pressure():
+    from repro.launch.scheduler import Request, Scheduler
+    reg = MetricsRegistry()
+    sch = Scheduler("continuous", prefill_chunk=100, metrics=reg)
+    for i in range(3):
+        sch.submit(Request(rid=i, tokens=np.arange(4, dtype=np.int32),
+                           max_new=2))
+    # pool can cover one admission (need 2 of 3 obtainable), not two
+    out = sch.admit(0, free_slots=[0, 1, 2], occupied=0,
+                    page_budget=3, page_need=2)
+    assert len(out) == 1
+    assert reg.value("scheduler.admissions_deferred_pool") == 1.0
+    # pressure released: the deferred requests admit in FIFO order
+    out = sch.admit(1, free_slots=[1, 2], occupied=1,
+                    page_budget=10, page_need=2)
+    assert [r.rid for r, _ in out] == [1, 2]
+    assert reg.value("scheduler.admissions_deferred_pool") == 1.0
+    # no budget passed (ring layout): pressure check is inert
+    sch.submit(Request(rid=9, tokens=np.arange(4, dtype=np.int32),
+                       max_new=2))
+    assert len(sch.admit(2, free_slots=[0], occupied=2)) == 1
+
+
+def test_pagepool_available_counts_reclaimable():
+    from repro.runtime.kv_cache import PagePool
+    pool = PagePool(n_pages=4, page_size=8)
+    a = pool.alloc(1)
+    b = pool.alloc(1)
+    assert pool.free_count == 2
+    assert pool.reclaimable_count == 0       # live refs: not evictable
+    assert pool.available_count == 2
+    # registry-only pins are LRU-evictable -> reclaimable
+    pool.register_prefix([b"k1"], a)
+    pool.release(b)
+    pool.release(a)                          # a survives via its pin
+    assert pool.free_count == 3
+    assert pool.reclaimable_count == 1
+    assert pool.available_count == 4
+
+
+# ---------------------------------------------------------------------------
+# prefix_hit trace events reconcile against the stats counters
+# ---------------------------------------------------------------------------
+def _paged_trace(with_hit_event=True):
+    rec = trace.TraceRecorder()
+    tr = trace.req_track(0)
+    rec.instant("admit", track=tr, ts=0.0, rid=0, prompt_len=8,
+                prefix_hit_tokens=8)
+    if with_hit_event:
+        rec.instant("prefix_hit", track=tr, ts=0.0, rid=0, pages_reused=1,
+                    tokens=8, flops_saved=100.0)
+    rec.instant("first_token", track=tr, ts=0.1, rid=0, token=1)
+    rec.span("decode_step", 0.1, 0.2, slots=1)
+    rec.instant("token", track=tr, ts=0.2, rid=0, token=2)
+    rec.instant("complete", track=tr, ts=0.2, rid=0)
+    return rec
+
+
+def test_reconcile_accepts_matching_prefix_hits():
+    stats = {"t_decode_s": 0.1, "t_prefill_s": 0.0, "decode_steps": 1,
+             "tokens_generated": 2, "admitted": 1, "completed": 1,
+             "prefix_hit_tokens": 8, "prefill_flops_saved": 100.0}
+    assert trace.reconcile(_paged_trace(), stats) == []
+
+
+def test_reconcile_flags_prefix_hit_mismatches():
+    stats = {"t_decode_s": 0.1, "t_prefill_s": 0.0, "decode_steps": 1,
+             "tokens_generated": 2, "admitted": 1, "completed": 1,
+             "prefix_hit_tokens": 8, "prefill_flops_saved": 100.0}
+    # a remap admission with no prefix_hit event is under-counted
+    problems = trace.reconcile(_paged_trace(with_hit_event=False), stats)
+    assert any("prefix_hit" in p for p in problems)
+    # token/FLOP totals diverging from the counters is flagged too
+    bad = dict(stats, prefix_hit_tokens=4, prefill_flops_saved=50.0)
+    problems = trace.reconcile(_paged_trace(), bad)
+    assert any("prefix_hit tokens" in p for p in problems)
+    assert any("flops_saved" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# packed session: health computed from the scales packing actually used
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_session_pack_health_zero_saturation_per_channel():
+    """per_channel packing derives scales from the weights themselves
+    (max|w|/qmax) — its own calibration data — so saturation is exactly
+    zero at every site and the saturation watcher can never fire."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.core.policy import MPQPolicy
+    from repro.models import lm
+    from repro.models.quant_layers import QuantContext
+    from repro.runtime.session import QuantizedSession
+
+    cfg = smoke_config("limpq-demo")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    ql = lm.enumerate_qlayers(cfg)
+    policy = MPQPolicy.uniform(ql, 4)
+    sess = QuantizedSession(cfg, params, policy, ctx, mode="packed",
+                            kv_quant="int8", per_channel=True)
+    assert len(sess.pack_health) == len(ql)
+    for name, h in sess.pack_health.items():
+        assert h["saturation_rate"] == 0.0, (name, h)
+        assert h["scale_utilization"] <= 1.0 + 1e-6, (name, h)
+    summary = health.pack_summary(sess.pack_health)
+    assert summary["saturation_rate_max"] == 0.0
+    reg = MetricsRegistry()
+    health.publish_pack_health(reg, sess.pack_health)
+    mon = monitor.default_monitor()
+    assert mon.check(reg) == []

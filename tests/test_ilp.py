@@ -87,3 +87,118 @@ def test_search_time_scales():
     dt = time.perf_counter() - t0
     assert sol.feasible
     assert dt < 5.0
+
+
+# ---------------------------------------------------------------------------
+# SolveReport: the ILP audit trail
+# ---------------------------------------------------------------------------
+def _qlayers(L=4):
+    from repro.core.qspec import QLayer
+    return [QLayer(name=f"blk.{i}.w", segment="body", unit=i, path=("w",),
+                   in_dim=32, out_dim=64, n_mats=1,
+                   macs_per_token=32.0 * 64.0, w_params=32 * 64, kind="mlp")
+            for i in range(L)]
+
+
+def _searched(seed=0, L=4, bits=(2, 4, 8)):
+    """A real solve over synthetic indicators (monotone in bit-width,
+    like the trained scales) under a mid-range size budget."""
+    from repro.core import qspec, search
+    rng = np.random.default_rng(seed)
+    ql = _qlayers(L)
+    ind = {q.name: {"w": np.sort(rng.uniform(0.1, 1.0, len(bits)))[::-1],
+                    "a": np.sort(rng.uniform(0.1, 1.0, len(bits)))[::-1]}
+           for q in ql}
+    budget = sum(qspec.model_bits(q, 4) for q in ql) / 8.0
+    res = search.search_policy(ql, ind, list(bits),
+                               size_budget_bytes=budget)
+    return ql, res
+
+
+def test_solve_report_round_trips_json(tmp_path):
+    import json
+    ql, res = _searched()
+    report = res.report
+    rt = ilp.SolveReport.from_json(json.loads(json.dumps(report.to_json())))
+    assert rt == report
+    # ...and through the file API (what checkpoint/--explain-policy use)
+    path = str(tmp_path / "solve_report.json")
+    report.save(path)
+    assert ilp.SolveReport.load(path) == report
+    # the searched policy carries the same audit in its meta
+    assert ilp.SolveReport.from_json(res.policy.meta["solve_report"]) \
+        == report
+
+
+def test_solve_report_replay_reproduces_objective():
+    from repro.core.policy import MPQPolicy
+    ql, res = _searched()
+    report = res.report
+    # rebuilding a policy from the reported bits must validate cleanly
+    pb = report.policy_bits()
+    policy = MPQPolicy(pb["w_bits"], pb["a_bits"]).validate(ql, report.bits)
+    # replaying its size accounting reproduces the constraint's used cost
+    assert policy.size_bytes(ql) * 8 == \
+        pytest.approx(report.constraint("size_bits")["used"])
+    assert policy.size_bytes(ql) == pytest.approx(res.size_bytes)
+    # per-layer objective decomposition sums to the reported objective,
+    # and each term is the candidate grid entry the chosen bits select
+    assert sum(report.importance) == pytest.approx(report.objective)
+    n = len(report.bits)
+    for L, name in enumerate(report.layers):
+        c = (report.bits.index(report.chosen_w[L]) * n
+             + report.bits.index(report.chosen_a[L]))
+        assert report.candidate_values[L][c] == report.importance[L]
+
+
+def test_solve_report_constraints_and_binding():
+    ql, res = _searched()
+    report = res.report
+    size = report.constraint("size_bits")
+    assert size["budget"] is not None
+    assert size["slack"] == pytest.approx(size["budget"] - size["used"])
+    assert size["slack"] >= 0.0                   # solution is feasible
+    # bitops was tracked but not constrained in this solve
+    ops = report.constraint("bitops")
+    assert ops["budget"] is None and ops["used"] > 0.0
+    # exactly one budgeted constraint is marked binding
+    assert [c["name"] for c in report.constraints if c["binding"]] \
+        == ["size_bits"]
+    assert report.binding == "size_bits"
+    with pytest.raises(KeyError):
+        report.constraint("nope")
+
+
+def test_solve_report_rejects_newer_schema():
+    ql, res = _searched()
+    obj = res.report.to_json()
+    obj["schema"] = ilp.SOLVE_REPORT_SCHEMA + 1
+    with pytest.raises(ValueError):
+        ilp.SolveReport.from_json(obj)
+
+
+def test_solve_report_render_table():
+    ql, res = _searched()
+    text = res.report.render_table()
+    for q in ql:
+        assert q.name in text
+    assert "objective" in text and "<- binding" in text
+    assert "(tracked, unconstrained)" in text     # the bitops row
+
+
+def test_describe_policy_report_for_hand_policy():
+    from repro.core.policy import MPQPolicy
+    ql = _qlayers()
+    bits = [2, 4, 8]
+    policy = MPQPolicy.uniform(ql, 4)
+    report = ilp.describe_policy_report(ql, policy, bits,
+                                        meta={"arch": "toy"})
+    assert report.meta["kind"] == "describe" and report.meta["arch"] == "toy"
+    assert report.chosen_w == [4] * len(ql)
+    # budgets are pinned to the used costs: slack exactly 0, size binding
+    size = report.constraint("size_bits")
+    assert size["slack"] == 0.0 and report.binding == "size_bits"
+    assert size["used"] == pytest.approx(policy.size_bytes(ql) * 8)
+    # importance is unknown post-hoc: the objective decomposes to zeros
+    assert report.objective == 0.0
+    assert report.render_table()
