@@ -77,6 +77,11 @@ GATED_QUANT = {
     # a zero baseline can never mask a regression via the ratio formula)
     "saturation_rate_max": +1,
     "alerts_fired": +1,
+    # self-speculative decoding: the fraction of int4-draft proposals the
+    # searched target policy confirms is deterministic on the demo preset
+    # (greedy everywhere) — shrinking means the draft repack or the
+    # verify/rollback path regressed
+    "spec_accept_rate": -1,
 }
 INFO_QUANT = (
     "packed_tok_per_s",
@@ -95,6 +100,11 @@ INFO_QUANT = (
     # sites): informational — tracks how tightly the trained scales hug
     # the served weights, but init noise moves it
     "scale_utilization_p50",
+    # speculative throughput and its ratio to the single-policy engine:
+    # wall-clock, so never ratio-gated — the > 1.0x floor is the boolean
+    # spec_speedup_gt_1 flag instead
+    "spec_tokens_per_s",
+    "spec_speedup_vs_single",
 )
 
 # boolean identity flags checked per profile (False or missing = failure)
@@ -104,11 +114,18 @@ IDENTITY_FLAGS = {
     # within 5% of the fused route's measured cache traffic
     # shared_prefix_token_identical: the paged layout must generate the
     # ring layout's exact greedy tokens on both decode-attention routes
+    # spec_token_identical: the speculating engine (int4 draft, searched
+    # verify) must emit the single-policy engine's exact greedy tokens
+    # spec_speedup_gt_1: a draft-k/verify-once round must beat k single
+    # steps in measured decode wall-clock (a floor, not a ratio — hosted
+    # runners are too noisy for absolute tok/s gates)
     "quant": (
         "token_identical",
         "sharded_token_identical",
         "decode_attn_bytes_match",
         "shared_prefix_token_identical",
+        "spec_token_identical",
+        "spec_speedup_gt_1",
     ),
 }
 

@@ -95,6 +95,8 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
                      w_bits_total: Optional[float] = None,
                      unique_pages: Optional[int] = None,
                      page_size: int = 0,
+                     spec_k: int = 0,
+                     draft_w_bits: float = 2.0,
                      chip: ChipSpec = DEFAULT_CHIP) -> dict:
     """Analytic three-term roofline for ONE continuous-batching decode step.
 
@@ -129,6 +131,21 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
       is what the engine actually pays off-TPU, so ``suggest_prefill_chunk``
       budgets honestly instead of assuming the kernel route.
 
+    ``spec_k > 0`` models ONE self-speculative decode ROUND instead of one
+    token-at-a-time step: a ``draft_w_bits``-wide uniform repack of the
+    same weights proposes ``spec_k`` tokens autoregressively (the draft
+    weight bytes are re-read once per drafted token — that is the whole
+    point of drafting low-bit), then the target policy verifies all of
+    them in a single batched ``spec_k + 1``-token step (the target weight
+    bytes move ONCE for the round, amortized over every verified token).
+    Compute runs ``2 * spec_k + 1`` token-passes, the KV cache is attended
+    ``spec_k + 1`` times (k draft reads + one batched verify read), and
+    the tp all-reduce wire scales the same way. A round can emit up to
+    ``spec_k + 1`` tokens, so the modeled win condition is
+    ``round.step_s < (accepted + 1) * single.step_s`` — the benches gate
+    the memory-bound version of it (``spec_k`` draft reads + one target
+    read < ``spec_k`` target reads) on the demo preset.
+
     ``unique_pages`` + ``page_size`` switch the KV term to the paged
     layout's accounting: shared-prefix pages are physically one allocation,
     so a step touches ``unique_pages * page_size`` cache rows instead of
@@ -148,6 +165,11 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
     paged = unique_pages is not None
     if paged and page_size <= 0:
         raise ValueError("paged KV accounting needs page_size > 0")
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    if spec_k and not 0 < draft_w_bits <= 8:
+        raise ValueError("speculative drafting is a sub-8-bit repack: "
+                         f"draft_w_bits must be in (0, 8], got {draft_w_bits}")
     if paged and kv_bits > 8:
         raise ValueError("paged KV pages hold int8 codes: kv_bits must be "
                          f"<= 8, got {kv_bits}")
@@ -193,9 +215,19 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
         # int32 slot -> page-list indirection, gathered every step
         pages_per_slot = -(-max(kv_rows, 1) // page_size)
         kv_bytes += n_slots * pages_per_slot * n_kv_layers * 4.0
-    memory_s = (w_bytes + kv_bytes) / chip.hbm_bytes_s
+    draft_bytes = 0.0
+    if spec_k:
+        # one speculative ROUND: the draft weights move once per drafted
+        # token (k autoregressive passes), the target weights move ONCE
+        # for the whole batched (k+1)-token verify, and the KV cache is
+        # attended k + 1 times (each draft step + one verify read)
+        draft_bytes = spec_k * w_params * (draft_w_bits / 8.0) / tp
+        kv_bytes = (spec_k + 1.0) * kv_bytes
+        compute_s = (2 * spec_k + 1) * compute_s
+    memory_s = (w_bytes + draft_bytes + kv_bytes) / chip.hbm_bytes_s
     wire = (2.0 * 2 * cfg.n_layers * n_slots * cfg.d_model
             * 2 * (tp_size - 1) / max(tp_size, 1)) if tp_size > 1 else 0.0
+    wire *= (2 * spec_k + 1) if spec_k else 1
     collective_s = wire / chip.ici_bytes_s
 
     terms = {"compute": compute_s, "memory": memory_s,
@@ -209,7 +241,8 @@ def decode_step_cost(cfg: ModelConfig, n_slots: int, *,
             # alone — the decode-attention bytes gate compares kv_hbm_bytes
             # against the measured cache inventory) and the tp all-reduce
             # wire bytes
-            "hbm_bytes": w_bytes + kv_bytes, "kv_hbm_bytes": kv_bytes,
+            "hbm_bytes": w_bytes + draft_bytes + kv_bytes,
+            "kv_hbm_bytes": kv_bytes, "draft_hbm_bytes": draft_bytes,
             "wire_bytes": wire}
 
 
@@ -219,6 +252,8 @@ def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
                           kv_bits: float = 16.0,
                           kv_attend: str = "fused",
                           w_bits_total: Optional[float] = None,
+                          spec_k: int = 0,
+                          draft_w_bits: float = 2.0,
                           chip: ChipSpec = DEFAULT_CHIP,
                           min_chunk: int = 16, max_chunk: int = 512) -> int:
     """Prefill-token budget per engine iteration, from the decode roofline.
@@ -231,11 +266,19 @@ def suggest_prefill_chunk(cfg: ModelConfig, n_slots: int, *,
     prefill compute time, clamped to [min_chunk, max_chunk] so admission
     neither starves (tiny models: huge headroom) nor stalls decode (big
     models: none).
+
+    ``spec_k > 0`` budgets a self-speculative engine honestly: one
+    iteration is then a whole draft-k/verify-once round
+    (``decode_step_cost(spec_k=...)``), whose compute term is
+    ``2 * spec_k + 1`` token-passes — the headroom that can carry prefill
+    per iteration shrinks or grows with the round shape, not with the
+    single-token step the engine no longer runs.
     """
     cost = decode_step_cost(cfg, n_slots, cache_tokens=cache_tokens,
                             tp_size=tp_size, avg_weight_bits=avg_weight_bits,
                             kv_bits=kv_bits, kv_attend=kv_attend,
-                            w_bits_total=w_bits_total, chip=chip)
+                            w_bits_total=w_bits_total, spec_k=spec_k,
+                            draft_w_bits=draft_w_bits, chip=chip)
     ceiling = max(cost["memory_s"], cost["collective_s"])
     headroom_s = max(ceiling - cost["compute_s"], 0.0)
     from repro.models import lm

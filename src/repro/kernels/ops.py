@@ -109,6 +109,33 @@ def decode_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale, page_pos,
                                        window=window, interpret=interpret)
 
 
+def verify_attn_quant(q, k_codes, k_scale, v_codes, v_scale, pos_arr, q_pos,
+                      *, window=None, interpret=None):
+    """S-token speculative-verify attention on int8 KV codes: unrolled onto
+    the exact one-token kernel program per query position (see
+    ``kernels.quant_attention.verify_attn_quant`` for why the unroll is
+    the bitwise-identity contract)."""
+    from repro.kernels import quant_attention as _qa
+    if interpret is None:
+        interpret = _interpret_default()
+    return _qa.verify_attn_quant(q, k_codes, k_scale, v_codes, v_scale,
+                                 pos_arr, q_pos, window=window,
+                                 interpret=interpret)
+
+
+def verify_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale, page_pos,
+                            page_table, q_pos, *, window=None,
+                            interpret=None):
+    """S-token speculative-verify attention over the paged int8 KV layout
+    (``kernels.quant_attention.verify_attn_quant_paged``)."""
+    from repro.kernels import quant_attention as _qa
+    if interpret is None:
+        interpret = _interpret_default()
+    return _qa.verify_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale,
+                                       page_pos, page_table, q_pos,
+                                       window=window, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # rwkv wkv
 # ---------------------------------------------------------------------------

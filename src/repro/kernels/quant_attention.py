@@ -291,3 +291,53 @@ def decode_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale, page_pos,
     )(tbl, qp, qf, kf, ks, vf, vs, pos)
 
     return out.reshape(B, KV, G, hd).reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# multi-token verify (self-speculative decoding)
+# ---------------------------------------------------------------------------
+def verify_attn_quant(q, k_codes, k_scale, v_codes, v_scale, pos_arr, q_pos,
+                      *, window: Optional[int] = None,
+                      kv_block: int = DEFAULT_KV_BLOCK,
+                      interpret: bool = False):
+    """S-token verify attention on int8 KV codes (ring layout).
+
+    ``q (B, S, H, hd)``, ``q_pos (B, S)`` — the speculative verify step
+    attends the current token plus the k draft proposals in one launch,
+    each query masking by its own absolute position.
+
+    Deliberately UNROLLED over the ``S`` query positions, each reusing the
+    EXACT one-token :func:`decode_attn_quant` kernel program (same block
+    shapes, same grid, same accumulation order). A true multi-query q
+    block would be fewer programs, but changing the operand shapes can
+    change tiling — and with it the fp accumulation order — which would
+    break the bitwise contract that makes speculative decode KV- and
+    token-identical to token-at-a-time decode. ``S = k + 1`` is small and
+    static, so the unroll stays one jit launch with S kernel calls.
+    """
+    outs = [
+        decode_attn_quant(q[:, j:j + 1], k_codes, k_scale, v_codes, v_scale,
+                          pos_arr, q_pos[:, j], window=window,
+                          kv_block=kv_block, interpret=interpret)
+        for j in range(q.shape[1])
+    ]
+    return jnp.concatenate(outs, axis=1)
+
+
+def verify_attn_quant_paged(q, k_pages, k_scale, v_pages, v_scale, page_pos,
+                            page_table, q_pos, *,
+                            window: Optional[int] = None,
+                            interpret: bool = False):
+    """S-token verify attention over the paged int8 KV layout: the paged
+    counterpart of :func:`verify_attn_quant`, unrolled over the S query
+    positions onto the exact :func:`decode_attn_quant_paged` program for
+    the same bitwise-identity reason (see there). ``q (B, S, H, hd)``,
+    ``q_pos (B, S)``; rejected-draft rows already written to the pages
+    mask out per query position exactly like future rows."""
+    outs = [
+        decode_attn_quant_paged(q[:, j:j + 1], k_pages, k_scale, v_pages,
+                                v_scale, page_pos, page_table, q_pos[:, j],
+                                window=window, interpret=interpret)
+        for j in range(q.shape[1])
+    ]
+    return jnp.concatenate(outs, axis=1)

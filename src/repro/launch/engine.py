@@ -119,6 +119,7 @@ class EngineConfig:
     bucket_min: int = 8  # smallest prompt bucket
     trace: bool = True  # record the per-request lifecycle event trace
     health_every: int = 4  # KV-scale drift sample stride (decode steps; 0 off)
+    speculate: int = 0  # self-speculative draft length k (0 = off)
 
 
 @dataclasses.dataclass
@@ -149,6 +150,9 @@ class EngineStats:
     kv_unique_pages: int = 0  # paged layout: distinct physical pages mapped
     admissions_deferred_pool: int = 0  # admit rounds held on page pressure
     alerts_fired: int = 0  # monitor threshold trips this epoch
+    spec_rounds: int = 0  # draft+verify rounds (speculate > 0)
+    spec_draft_tokens: int = 0  # tokens the low-bit draft policy proposed
+    spec_accepted_tokens: int = 0  # proposals the target policy confirmed
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
     latency: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -162,11 +166,17 @@ class EngineStats:
         total = self.tokens_generated + self.prefill_tokens
         return total / max(self.t_decode_s + self.t_prefill_s, 1e-9)
 
+    @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of drafted tokens the target verified (greedy match)."""
+        return self.spec_accepted_tokens / max(self.spec_draft_tokens, 1)
+
     def as_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.update(d.pop("latency"))
         d["decode_tokens_per_s"] = self.decode_tokens_per_s
         d["total_tokens_per_s"] = self.total_tokens_per_s
+        d["spec_accept_rate"] = self.spec_accept_rate
         return d
 
 
@@ -236,6 +246,8 @@ class _Slot:
         "admitted_at",
         "ts_admit",
         "ts_last_token",
+        "spec_drafted",
+        "spec_accepted",
     )
 
     def __init__(
@@ -254,6 +266,8 @@ class _Slot:
         self.admitted_at = now
         self.ts_admit = ts_admit  # trace-clock stamp of the admit event
         self.ts_last_token = ts_last_token  # last emitted token (ITL base)
+        self.spec_drafted = 0  # draft proposals made for this slot
+        self.spec_accepted = 0  # proposals the target policy confirmed
 
 
 class DecodeEngine:
@@ -323,6 +337,36 @@ class DecodeEngine:
             self._flops_per_token = 2.0 * sum(
                 q.macs_per_token * q.n_mats for q in lm.enumerate_qlayers(cfg)
             )
+        self._spec_k = int(self.ecfg.speculate or 0)
+        self.draft_params = getattr(adapter, "draft_params", None)
+        if self._spec_k:
+            # self-speculative decoding: the adapter must carry the dual
+            # pack (runtime.session.SpecSession) and the schedule must be
+            # rollback-safe — rejecting a draft token rewinds KV rows by
+            # position, which only attention caches support
+            if not hasattr(adapter, "verify") or self.draft_params is None:
+                raise ValueError(
+                    "speculate > 0 needs a dual-policy adapter "
+                    "(runtime.session.SpecSession): a draft_params tree to "
+                    "propose tokens and a verify() pass to confirm them"
+                )
+            if axes.enabled:
+                raise ValueError(
+                    "speculate > 0 is single-device for now: the draft/"
+                    "verify interleave donates one state across two jits"
+                )
+            bad = {s.kind for s in lm.iter_sites(cfg)} - {"attn", "dense", "moe"}
+            if bad:
+                raise ValueError(
+                    f"speculate > 0 requires an attention-only schedule: "
+                    f"{sorted(bad)} state is sequential and cannot roll "
+                    "back past a rejected draft token"
+                )
+            if cfg.sliding_window or cfg.local_window:
+                raise ValueError(
+                    "speculate > 0 does not support sliding-window archs: "
+                    "the ring window overwrites rows a rollback would need"
+                )
         kv_bits = (
             8.0
             if kv_mode == "int8"
@@ -352,6 +396,11 @@ class DecodeEngine:
             kv_bits=kv_bits,
             kv_attend=kv_attend,
             w_bits_total=getattr(adapter, "w_bits_total", None),
+            # a speculating engine's iteration is a whole draft+verify
+            # round, so the per-iteration prefill headroom must be
+            # budgeted against the round cost, not a single-token step
+            spec_k=self._spec_k,
+            draft_w_bits=float(getattr(adapter, "draft_w_bits", 2.0)),
             chip=self.ecfg.chip,
         )
         self.prefill_chunk = int(chunk)
@@ -473,6 +522,11 @@ class DecodeEngine:
             self._append = (
                 jax.jit(append, donate_argnums=(5,)) if self._paged else None
             )
+            self._spec_verify = jax.jit(
+                self._spec_verify_fn, donate_argnums=(5,)
+            )
+            self._spec_draft_jits: Dict[int, Any] = {}
+            self._spec_fused_jits: Dict[int, Any] = {}
         else:
             # explicit shardings end-to-end: params enter on their specs,
             # the decode state's slot axis stays pinned over dp across the
@@ -503,6 +557,9 @@ class DecodeEngine:
                 out_shardings=ss,
             )
             self._map_slot = self._free_pages = self._append = None
+            self._spec_verify = None
+            self._spec_draft_jits = {}
+            self._spec_fused_jits = {}
 
     # -- observability -------------------------------------------------------
     def _init_obs(self) -> None:
@@ -520,6 +577,10 @@ class DecodeEngine:
             "engine.slots", help="configured concurrent-sequence capacity"
         ).set(self.ecfg.slots)
         m.gauge("engine.prefill_chunk").set(self.prefill_chunk)
+        if self.ecfg.speculate:
+            m.gauge(
+                "engine.speculate", help="self-speculative draft length k"
+            ).set(self.ecfg.speculate)
         # registry-side route record; the string itself stays on
         # self.decode_attn_route / EngineStats.decode_attn_route
         m.counter(f"engine.decode_attn_route.{self.decode_attn_route}").inc()
@@ -614,6 +675,9 @@ class DecodeEngine:
                 m.value("scheduler.admissions_deferred_pool")
             ),
             alerts_fired=int(m.value(obs_monitor.ALERTS_FIRED)),
+            spec_rounds=int(m.value("spec.rounds")),
+            spec_draft_tokens=int(m.value("spec.draft_tokens")),
+            spec_accepted_tokens=int(m.value("spec.accepted_tokens")),
             t_prefill_s=m.value("engine.t_prefill_s"),
             t_decode_s=m.value("engine.t_decode_s"),
             latency=lat,
@@ -728,6 +792,8 @@ class DecodeEngine:
             tokens=slot.gen[: slot.req.max_new],
             admitted_at=slot.admitted_at,
             finished_at=now,
+            spec_drafted=slot.spec_drafted,
+            spec_accepted=slot.spec_accepted,
         )
         m = self.metrics
         m.counter("engine.completed").inc()
@@ -1034,6 +1100,235 @@ class DecodeEngine:
             if len(s.gen) >= s.req.max_new or nxt[i] == self.ecfg.eos_id:
                 self._mark_done(i, now)
 
+    # -- self-speculative decode --------------------------------------------
+    def _spec_draft_body(self, steps: int, p, tok, pos, state):
+        """``steps`` single-token draft-policy decodes inside one
+        ``lax.scan`` (argmax stays in-graph), writing draft KV rows at
+        p..p+steps-1. Returns (drafts (n, steps), state)."""
+
+        def body(carry, _):
+            tok, pos, st = carry
+            logits, st = self.adapter.decode(p, tok, pos, st)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (nxt[:, None], jnp.where(pos < 0, pos, pos + 1), st), nxt
+
+        (_, _, st), drafts = jax.lax.scan(
+            body, (tok, pos, state), None, length=steps
+        )
+        return drafts.T, st
+
+    def _spec_verify_fn(self, p, tok, drafts, pos, remaining, state):
+        """Multi-token TARGET pass over [cur, d1..dk] at positions p..p+k
+        (overwriting every draft KV row with target-computed rows and
+        writing row p+k), then — still in-graph — the greedy acceptance
+        walk, emission truncation (max_new remaining first, then first
+        EOS: the exact order a token-at-a-time engine stops in), and the
+        KV rollback past each slot's last fed row. Free slots (pos -1)
+        ride along at sentinel positions and an untouchable rollback cut.
+        Returns (targets (n, k+1), accept_len (n,), emit_count (n,),
+        state)."""
+        k = drafts.shape[1]
+        vtok = jnp.concatenate([tok, drafts], axis=1)
+        off = jnp.arange(k + 1, dtype=jnp.int32)
+        vpos = jnp.where(pos[:, None] < 0, -1, pos[:, None] + off[None])
+        logits, st = self.adapter.verify(p, vtok, vpos, state)
+        targets = jnp.argmax(logits, -1).astype(jnp.int32)  # (n, k+1)
+        accept = jnp.cumprod(
+            (drafts == targets[:, :k]).astype(jnp.int32), axis=1
+        )
+        a = accept.sum(axis=1)  # accepted draft prefix length
+        emit = jnp.minimum(a + 1, remaining)
+        eos_id = self.ecfg.eos_id
+        if eos_id is not None:
+            hits = (targets == eos_id) & (off[None] < emit[:, None])
+            first = jnp.argmax(hits, axis=1).astype(jnp.int32)
+            emit = jnp.where(hits.any(axis=1), first + 1, emit)
+        cut = jnp.where(pos < 0, jnp.int32(2**30), pos + emit)
+        st = lm.rollback_decode_state(st, cut)
+        return targets, a, emit, st
+
+    def _spec_draft(self, steps: int):
+        """Jitted draft pass for one round length — one dispatch instead
+        of k. Distinct ``steps`` values compile separately; the host clamp
+        in ``_spec_round`` keeps that set tiny (k plus end-of-sequence
+        remainders)."""
+        fn = self._spec_draft_jits.get(steps)
+        if fn is None:
+            fn = jax.jit(
+                lambda p, tok, pos, state: self._spec_draft_body(
+                    steps, p, tok, pos, state
+                ),
+                donate_argnums=(3,),
+            )
+            self._spec_draft_jits[steps] = fn
+        return fn
+
+    def _spec_fused(self, steps: int):
+        """The traceless fast path: draft scan + verify + acceptance +
+        rollback as ONE jitted launch — a whole speculative round costs a
+        single dispatch and a single fence. Used when ``trace`` is off
+        (the bench's measured configuration); with tracing on, the round
+        splits into draft/verify launches so the phase spans are honest
+        fenced timings rather than estimates."""
+        fn = self._spec_fused_jits.get(steps)
+        if fn is None:
+
+            def round_fn(tp, dp, tok, pos, remaining, state):
+                drafts, state = self._spec_draft_body(
+                    steps, dp, tok, pos, state
+                )
+                return self._spec_verify_fn(
+                    tp, tok, drafts, pos, remaining, state
+                )
+
+            fn = jax.jit(round_fn, donate_argnums=(5,))
+            self._spec_fused_jits[steps] = fn
+        return fn
+
+    def _spec_round(self, now: int) -> None:
+        """One speculative round over all live slots: the low-bit DRAFT
+        policy proposes k tokens (one scan launch, writing draft KV rows
+        at p..p+k-1), the searched TARGET policy verifies [cur, d1..dk]
+        in one multi-token pass (overwriting every draft row with
+        target-computed KV and writing row p+k), greedy acceptance walks
+        the longest matching prefix, and rows past each slot's last fed
+        token are rolled back. Emits 1..k+1 tokens per slot, all of them
+        the target policy's own greedy chain — token- and KV-bitwise
+        identical to ``_decode_step`` by construction; speculation only
+        changes how many launches that chain costs."""
+        live = [
+            i for i, s in enumerate(self.slots) if s is not None and not s.done
+        ]
+        k = min(
+            self._spec_k,
+            min(self.slots[i].req.max_new - len(self.slots[i].gen) for i in live),
+        )
+        if k < 1:
+            return self._decode_step(now)
+        n = self.ecfg.slots
+        toks = np.zeros((n, 1), np.int32)
+        pos = np.full((n,), -1, np.int32)
+        remaining = np.zeros((n,), np.int32)
+        for i in live:
+            s = self.slots[i]
+            toks[i, 0] = s.next_tok
+            pos[i] = s.next_pos
+            remaining[i] = s.req.max_new - len(s.gen)
+        m = self.metrics
+        t0 = time.perf_counter()
+        if self.trace is not None:
+            # two launches, fenced between, so the draft/verify phase
+            # spans carry measured durations; acceptance, truncation and
+            # rollback still run inside the verify launch
+            drafts, self.state = self._spec_draft(k)(
+                self.draft_params,
+                jnp.asarray(toks),
+                jnp.asarray(pos),
+                self.state,
+            )
+            jax.block_until_ready((drafts, self.state))
+            t_draft = time.perf_counter() - t0
+            targets, acc_arr, emit_arr, self.state = self._spec_verify(
+                self.params,
+                jnp.asarray(toks),
+                drafts,
+                jnp.asarray(pos),
+                jnp.asarray(remaining),
+                self.state,
+            )
+        else:
+            # traceless fast path: the whole round is ONE dispatch
+            t_draft = 0.0
+            targets, acc_arr, emit_arr, self.state = self._spec_fused(k)(
+                self.params,
+                self.draft_params,
+                jnp.asarray(toks),
+                jnp.asarray(pos),
+                jnp.asarray(remaining),
+                self.state,
+            )
+        jax.block_until_ready((targets, acc_arr, emit_arr, self.state))
+        dt = time.perf_counter() - t0
+        t_np = np.asarray(targets)
+        a_np = np.asarray(acc_arr)
+        e_np = np.asarray(emit_arr)
+        emits: Dict[int, List[int]] = {}
+        accepted_total = 0
+        for i in live:
+            s = self.slots[i]
+            accepted_total += int(a_np[i])
+            s.spec_drafted += k
+            s.spec_accepted += int(a_np[i])
+            m.histogram("spec.accept_len").observe(float(a_np[i]))
+            emit = [int(x) for x in t_np[i, : e_np[i]]]
+            emits[i] = emit
+            s.gen.extend(emit)
+            s.next_tok = emit[-1]
+            s.next_pos += len(emit)
+        m.counter("engine.t_decode_s").inc(dt)
+        m.counter("engine.decode_steps").inc()
+        m.counter("engine.slot_steps").inc(len(live))
+        m.counter("engine.padded_slot_steps").inc(len(self._occupied()))
+        m.counter("spec.rounds").inc()
+        m.counter("spec.draft_tokens").inc(k * len(live))
+        m.counter("spec.accepted_tokens").inc(accepted_total)
+        m.gauge("engine.act_quant_reused").set(
+            getattr(self.adapter, "act_quant_reused", 0) - self._act_reuse_base
+        )
+        m.histogram("engine.decode_step_ms").observe(dt * 1e3)
+        obs_health.attribute_latency(m, "decode_attn", self.decode_attn_route, dt)
+        he = self.ecfg.health_every
+        if he and int(m.value("engine.decode_steps")) % he == 0:
+            self._kv_drift.publish(m, self._kv_drift.update(self.state))
+        ts1 = self.trace.now() if self.trace is not None else time.perf_counter()
+        if self.trace is not None:
+            self.trace.span(
+                "decode_step", ts1 - dt, ts1, slots=len(live), iteration=now
+            )
+            self.trace.span(
+                "spec_draft",
+                ts1 - dt,
+                ts1 - dt + t_draft,
+                slots=len(live),
+                k=k,
+                iteration=now,
+            )
+            self.trace.span(
+                "spec_verify_phase",
+                ts1 - dt + t_draft,
+                ts1,
+                slots=len(live),
+                iteration=now,
+            )
+            self.trace.instant(
+                "spec_verify",
+                ts=ts1,
+                drafted=k * len(live),
+                accepted=accepted_total,
+                emitted=sum(len(e) for e in emits.values()),
+                iteration=now,
+            )
+        itl = m.histogram("engine.itl_ms")
+        for i in live:
+            s = self.slots[i]
+            itl.observe((ts1 - s.ts_last_token) * 1e3)
+            s.ts_last_token = ts1
+            if self.trace is not None:
+                for tkn in emits[i]:
+                    self.trace.instant(
+                        "token",
+                        track=obs_trace.req_track(s.req.rid),
+                        ts=ts1,
+                        rid=s.req.rid,
+                        token=tkn,
+                        iteration=now,
+                    )
+            if (
+                len(s.gen) >= s.req.max_new
+                or s.next_tok == self.ecfg.eos_id
+            ):
+                self._mark_done(i, now)
+
     # -- main loop ----------------------------------------------------------
     def step(self, now: int) -> bool:
         """One engine iteration: release a drained round (fixed policy),
@@ -1058,7 +1353,10 @@ class DecodeEngine:
             for req, idx in picks:
                 self._admit(req, idx, now)
         if any(s is not None and not s.done for s in self.slots):
-            self._decode_step(now)
+            if self._spec_k:
+                self._spec_round(now)
+            else:
+                self._decode_step(now)
         elif self._occupied():
             pass  # held round finished at admission: released next tick
         elif not self.scheduler.has_pending():

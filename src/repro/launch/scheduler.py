@@ -91,6 +91,13 @@ class Completion:
     tokens: List[int]  # generated ids, length <= max_new
     admitted_at: int  # engine iteration of admission (prefill)
     finished_at: int  # engine iteration after which the sequence was done
+    # self-speculative decoding bookkeeping (zero when speculate=0): how
+    # many tokens the low-bit draft proposed while this request held its
+    # slot, and how many of those the target policy confirmed — the
+    # per-request acceptance rate the aggregate EngineStats.spec_* counters
+    # cannot attribute
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
 
 class Scheduler:

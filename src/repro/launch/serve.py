@@ -32,12 +32,23 @@ kernel program through the interpreter (the CI proof that the fused route
 stays greedy-token-identical to the reference), ``dequant-fp`` is the
 exact fallback, ``auto`` (default) resolves by backend.
 
+``--speculate k`` turns on self-speculative decoding over the ``--policy``
+runtime: the session packs a second, uniform low-bit policy
+(``--draft-bits``, default int2) over the SAME weights and indicator-bank
+scales, the draft proposes k tokens autoregressively, and the searched
+target policy verifies all k in one batched multi-token step sharing the
+int8 KV cache (draft-written rows past the first rejection are rolled
+back). Greedy acceptance keeps the output token-identical to
+non-speculative decode; with ``--smoke`` that identity is gated hard.
+
 Examples:
   python -m repro.launch.serve --smoke
   python -m repro.launch.serve --write-demo-policy searched.json
   python -m repro.launch.serve --smoke --policy searched.json
   python -m repro.launch.serve --smoke --policy searched.json \
       --decode-attn fused-interpret
+  python -m repro.launch.serve --smoke --policy searched.json \
+      --speculate 4 --kv-layout paged --decode-attn fused-interpret
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.serve --smoke --policy searched.json \
       --mesh host8
@@ -94,6 +105,9 @@ class ServeConfig:
     mesh: Optional[str] = None
     bucket: bool = True         # prompt-length bucketing (ring only)
     chip_table: Optional[str] = None  # measured device table json (roofline)
+    speculate: int = 0          # self-speculative draft length k (0 = off)
+    draft_bits: int = 2         # draft policy weight bits (--speculate)
+    sampling: str = "greedy"    # token selection; only greedy exists today
     seed: int = 0
 
     def __post_init__(self):
@@ -114,6 +128,54 @@ class ServeConfig:
                 raise ValueError(
                     "--kv-layout paged is single-device for now: the page "
                     "pool id space is not mesh-sharded")
+        if self.speculate < 0:
+            raise ValueError(f"--speculate must be >= 0, got {self.speculate}")
+        dispatch.ROUTES.validate("spec", "self" if self.speculate else "off")
+        if self.speculate:
+            # every incompatibility is rejected HERE, with the reason, not
+            # deep in the engine as a shape error three jits later
+            if self.sampling != "greedy":
+                raise ValueError(
+                    "--speculate requires greedy sampling: acceptance "
+                    "compares the draft token against the target argmax, "
+                    "which is only token-identity-preserving when the "
+                    "non-speculative path is also argmax")
+            if not self.policy_path:
+                raise ValueError(
+                    "--speculate needs --policy <searched.json>: the draft "
+                    "is a low-bit repack of the SAME packed weights "
+                    "(runtime.session.SpecSession), so there must be a "
+                    "packed target policy to draft for")
+            if self.kv == "fp":
+                raise ValueError(
+                    "--speculate requires --kv int8: draft and verify share "
+                    "one int8 KV cache (draft rows are overwritten by the "
+                    "verify pass, rolled back past the first rejection)")
+            if self.mesh:
+                raise ValueError(
+                    "--speculate is single-device for now: the fused "
+                    "draft-verify round does not shard")
+            if not (2 <= self.draft_bits <= 8):
+                raise ValueError(
+                    f"--draft-bits must be in [2, 8], got {self.draft_bits}; "
+                    "it must also be one of the arch's searched bit-widths "
+                    "so the draft grid shares the indicator-bank scales "
+                    "(checked against the config at session build)")
+            if self.kv_layout == "paged":
+                # rollback support is a cache-protocol capability, not a
+                # given: a paged pool without COW tail truncation would
+                # corrupt shared-prefix pages on rejection
+                from repro.runtime.kv_cache import PagedKVCache
+                if not callable(getattr(PagedKVCache, "rollback", None)):
+                    raise ValueError(
+                        "--speculate with --kv-layout paged needs "
+                        "PagedKVCache.rollback (drop/COW-truncate the tail "
+                        "pages past the first rejection); this build's "
+                        "paged cache does not support it")
+        elif self.sampling != "greedy":
+            raise ValueError(
+                f"unknown sampling mode {self.sampling!r}; the engine "
+                "decodes greedily (argmax)")
 
     @property
     def resolved_cache_len(self) -> int:
@@ -134,7 +196,8 @@ class ServeConfig:
             policy_path=args.policy, kv=args.kv, kv_layout=args.kv_layout,
             page_size=args.page_size, decode_attn=args.decode_attn,
             mesh=args.mesh, bucket=not args.no_bucket,
-            chip_table=args.chip_table, seed=args.seed)
+            chip_table=args.chip_table, speculate=args.speculate,
+            draft_bits=args.draft_bits, seed=args.seed)
 
     @property
     def chip(self):
@@ -151,7 +214,8 @@ class ServeConfig:
     def engine_config(self, *, kv_quant: Optional[str] = None,
                       schedule: Optional[str] = None,
                       layout: Optional[str] = None,
-                      calibrated: bool = True) -> EngineConfig:
+                      calibrated: bool = True,
+                      speculate: int = 0) -> EngineConfig:
         """An ``EngineConfig`` for one engine of this serving run.
 
         ``kv_quant`` defaults to the packed session's storage mode; a
@@ -160,7 +224,9 @@ class ServeConfig:
         ``calibrated=False`` keeps the default ``ChipSpec`` even when a
         ``--chip-table`` is loaded — reference engines budget with the
         stock envelope, so the smoke's token-identity gate doubles as the
-        calibrated-vs-default agreement check."""
+        calibrated-vs-default agreement check. ``speculate`` is opt-in per
+        engine (default 0): only the measured spec engine drafts — the
+        reference engines it gates against must stay token-at-a-time."""
         kv = self.session_kv if kv_quant is None else kv_quant
         lay = self.kv_layout if layout is None else layout
         if kv != "int8":
@@ -168,7 +234,8 @@ class ServeConfig:
         ecfg = EngineConfig(
             slots=self.slots, cache_len=self.resolved_cache_len,
             policy=schedule or self.schedule, kv_quant=kv, kv_layout=lay,
-            page_size=self.page_size, bucket_prompts=self.bucket)
+            page_size=self.page_size, bucket_prompts=self.bucket,
+            speculate=speculate)
         if calibrated and self.chip is not None:
             ecfg = dataclasses.replace(ecfg, chip=self.chip)
         return ecfg
@@ -473,15 +540,29 @@ def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
     ``--mesh``, per-shard packed bytes vs the per-chip budget
     ``policy.size_bytes / tp``. ``--kv-layout paged`` serves the same
     session over pooled KV pages with shared-prefix remapping; the token
-    gate then proves the paged layout against the ring reference."""
-    from repro.runtime.session import QuantizedSession, summarize
+    gate then proves the paged layout against the ring reference.
+    ``--speculate k`` swaps in a ``SpecSession`` (the same packed weights
+    carrying a second, low-bit draft policy) and the engine decodes in
+    draft-k/verify-once rounds; the smoke then adds a second token gate
+    against the same session decoding token-at-a-time."""
+    from repro.runtime.session import (QuantizedSession, SpecSession,
+                                       summarize)
 
     policy = MPQPolicy.load(scfg.policy_path)
     kv = scfg.session_kv
-    sess = QuantizedSession(cfg, params, policy, ctx, axes, mode="packed",
-                            kv_quant=kv)
+    if scfg.speculate:
+        try:
+            sess = SpecSession(cfg, params, policy, ctx, axes, mode="packed",
+                               kv_quant=kv, draft_w_bits=scfg.draft_bits)
+        except ValueError as e:
+            raise SystemExit(f"--speculate --draft-bits {scfg.draft_bits}: "
+                             f"{e}")
+    else:
+        sess = QuantizedSession(cfg, params, policy, ctx, axes, mode="packed",
+                                kv_quant=kv)
     eng = DecodeEngine(sess.params, cfg, None, ctx, axes,
-                       scfg.engine_config(), adapter=sess)
+                       scfg.engine_config(speculate=scfg.speculate),
+                       adapter=sess)
     streamer = attach_stream(args, eng)
     eng.submit_all(reqs)
     completions = eng.run()
@@ -503,6 +584,31 @@ def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
           f"{s['compression_vs_fp32']:.2f}x smaller than fp32 | "
           f"kv={s['kv_quant']} layout={eng.ecfg.kv_layout} "
           f"decode-attn={eng.decode_attn_route}")
+    if scfg.speculate:
+        es = eng.stats
+        print(f"speculate k={scfg.speculate} draft_bits={scfg.draft_bits}: "
+              f"{es.spec_rounds} rounds | drafted {es.spec_draft_tokens} "
+              f"accepted {es.spec_accepted_tokens} "
+              f"(accept rate {es.spec_accept_rate:.2f}) | draft pack "
+              f"{sess.draft_bytes()} B on top of {s['packed_bytes']} B")
+        if args.smoke:
+            # the speculative gate proper: the SAME packed session through
+            # a token-at-a-time engine — speculation must change nothing
+            # but the step count (greedy acceptance is exact by
+            # construction; this catches rollback/verify divergence)
+            ns = DecodeEngine(sess.params, cfg, None, ctx, axes,
+                              scfg.engine_config(), adapter=sess)
+            ns.submit_all(reqs)
+            ns_out = ns.run()
+            bad = [r.rid for r in completions.values()
+                   if ns_out[r.rid].tokens != r.tokens]
+            if bad:
+                raise SystemExit(
+                    "speculative decode diverged from non-speculative "
+                    f"packed decode: rids {bad}")
+            print(f"speculative tokens identical with non-speculative "
+                  f"packed decode ({eng.stats.decode_steps} spec rounds vs "
+                  f"{ns.stats.decode_steps} decode steps)")
     if eng.ecfg.kv_layout == "paged":
         es = eng.stats
         print(f"paged KV: {eng.pool.n_pages} pages x "
@@ -612,6 +718,16 @@ def main(argv=None):
                          "auto resolves fused on TPU / dequant-fp "
                          "elsewhere; fused-interpret runs the Pallas "
                          "kernel through the interpreter (CI equivalence)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: a low-bit draft repack "
+                         "of the same packed weights proposes K tokens per "
+                         "round and the searched policy verifies them in "
+                         "one batched step (needs --policy; greedy tokens "
+                         "stay identical by construction)")
+    ap.add_argument("--draft-bits", type=int, default=2,
+                    help="draft policy weight bit-width for --speculate; "
+                         "must be one of the arch's searched widths so the "
+                         "draft grid shares the indicator-bank scales")
     ap.add_argument("--mesh", default=None,
                     help="serve under a device mesh: host ((1,)) | host8 "
                          "(2-way data x 4-way tensor parallel; needs "

@@ -541,6 +541,60 @@ def decode_attention(q: Array, cache, k_new: Array, v_new: Array,
     return out, new
 
 
+def verify_attention(q: Array, cache, k_new: Array, v_new: Array,
+                     pos: Array, *, window: Optional[int]):
+    """Multi-token verify step for self-speculative decoding: append ALL S
+    rows per slot at once (``cache.append_batch`` — the chunked-append
+    write path batched over slots), then attend each of the S queries
+    through the *exact* single-token decode-attention primitive of the
+    resolved route (fused / fused-interpret / dequant-fp, ring and paged
+    alike).  ``q (B, S, H, hd)``, ``pos (B, S)`` per-slot absolute
+    positions (-1 sentinel rows for inactive slots).
+
+    Exactness contract: query ``j`` masks by its own position, so rows
+    written for later queries (and rejected-draft garbage) contribute
+    exact zeros after the NEG_INF bias — each query's output is bitwise
+    the one-token ``decode_attention`` would produce at that position,
+    which is what keeps speculative KV/token streams bitwise identical to
+    non-speculative decode per route and per layout.  The fused routes go
+    through ``kernels.ops.verify_attn_quant[_paged]``, which unrolls the
+    S query positions onto the exact one-token kernel program (S = k + 1,
+    small and static) so the whole verify remains one launch.
+    """
+    from repro.runtime import dispatch
+    out_dtype = v_new.dtype
+    S = q.shape[1]
+    pos32 = jnp.asarray(pos, jnp.int32)
+    new = cache.append_batch(k_new, v_new, pos32)
+    paged = isinstance(new, qkv.PagedKVCache)
+    quant = isinstance(new, QuantKVCache)
+    route = dispatch.resolve_decode_attn() if (paged or quant) \
+        else "dequant-fp"
+    if route != "dequant-fp":
+        from repro.kernels import ops
+        interp = True if route == "fused-interpret" else None
+        if paged:
+            out = ops.verify_attn_quant_paged(
+                q, new.k, new.k_scale, new.v, new.v_scale, new.pos,
+                new.page_table, pos32, window=window, interpret=interp)
+        else:
+            assert new.pos.ndim == 2, "verify_attention is per-slot only"
+            out = ops.verify_attn_quant(
+                q, new.k, new.k_scale, new.v, new.v_scale, new.pos, pos32,
+                window=window, interpret=interp)
+        return out.astype(out_dtype), new
+    dense = new.gather() if paged else new
+    assert dense.pos.ndim == 2, "verify_attention is per-slot only"
+    if isinstance(dense, QuantKVCache):
+        k = qkv.dequantize(dense.k, dense.k_scale, k_new.dtype)
+        v = qkv.dequantize(dense.v, dense.v_scale, out_dtype)
+    else:
+        k, v = dense.k, dense.v
+    outs = [_attend_rows(q[:, j:j + 1], k, v, dense.pos, pos32[:, j], window)
+            for j in range(S)]
+    return jnp.concatenate(outs, axis=1), new
+
+
 def append_attention(q: Array, cache, k_new: Array, v_new: Array,
                      q_pos: Array, slot, *, window: Optional[int]):
     """Chunked-prefill append for one paged slot: quantize-and-write the

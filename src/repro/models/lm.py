@@ -433,7 +433,10 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
     Modes: ``train`` (no state), ``prefill`` (build a fresh decode cache),
     ``decode`` (one token per batch row), ``append`` (chunked prefill: a
     multi-token chunk for ONE paged slot — ``pos`` is the chunk's absolute
-    position vector, ``slot`` the engine slot index)."""
+    position vector, ``slot`` the engine slot index), ``verify``
+    (speculative multi-token verify: S tokens per slot at per-slot
+    absolute positions ``pos (B, S)``, attended per query through the
+    single-token decode route — ``attention.verify_attention``)."""
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     is_cross = kind == "cross"
@@ -483,6 +486,11 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
             if mode == "decode":
                 p_ = jnp.asarray(pos, jnp.int32)
                 positions = jnp.maximum(p_, 0) if per_slot else p_[None]
+            elif mode == "verify":
+                # (B, S) per-slot absolute positions (speculative verify);
+                # sentinel rows (-1) take angle 0 — masked everywhere
+                positions = jnp.maximum(jnp.asarray(pos, jnp.int32),
+                                        0).reshape(-1)
             elif mode == "append":
                 # chunk of S absolute positions (pad rows carry -1; their
                 # rope angle is irrelevant — the cache write drops them)
@@ -493,6 +501,9 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
             if per_slot:            # (B, hd/2) -> (B, 1, 1, hd/2): one angle
                 cos = cos[:, None, None]    # per slot, broadcast over S and H
                 sin = sin[:, None, None]
+            elif mode == "verify":  # (B*S, hd/2) -> one angle per (slot,
+                cos = cos.reshape(B, S, 1, -1)          # token), broadcast
+                sin = sin.reshape(B, S, 1, -1)          # over heads
             from repro.models.common import apply_rope
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
@@ -507,6 +518,12 @@ def _attn_sublayer(x, p, bits, cfg: ModelConfig, ctx, axes: MeshAxes, kind: str,
                 v = qkv.fake_quant_kv(v)
             out, new_state = attn.decode_attention(q, state, k, v, pos,
                                                    window=window)
+        elif mode == "verify":
+            if ctx.kv_quant == "fake":
+                k = qkv.fake_quant_kv(k)
+                v = qkv.fake_quant_kv(v)
+            out, new_state = attn.verify_attention(
+                q, state, k, v, jnp.asarray(pos, jnp.int32), window=window)
         elif mode == "append":
             out, new_state = attn.append_attention(
                 q, state, k, v, jnp.asarray(pos, jnp.int32), slot,
@@ -739,6 +756,27 @@ def trim_decode_state(states, true_len):
                         is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES))
 
 
+def rollback_decode_state(states, cut):
+    """Invalidate KV rows at positions >= per-slot ``cut`` ((B,) int32) in
+    every cache of a per-slot decode state. This is the speculative-decode
+    rollback: draft-written rows past the first rejection are rewound (ring:
+    pos sentinel; paged: pos sentinel via the page table) so the cache is
+    bitwise identical — pos exactly, codes/scales on all valid rows — to a
+    non-speculative engine that decoded only the accepted tokens.
+    Non-cache state (recurrent, cross-attn image KV) has no positional
+    rows to rewind; speculation is gated to attention-only schedules
+    upstream (ServeConfig validation)."""
+    cut = jnp.asarray(cut, jnp.int32)
+
+    def one(c):
+        if isinstance(c, attn.CACHE_TYPES):
+            return c.rollback(cut)
+        return c
+
+    return jax.tree.map(one, states,
+                        is_leaf=lambda x: isinstance(x, attn.CACHE_TYPES))
+
+
 def finish_prefill(x, states, params, cfg: ModelConfig, ctx: QuantContext,
                    axes: MeshAxes, true_len=None):
     """Shared prefill epilogue (the bucketing contract lives HERE, for both
@@ -787,6 +825,23 @@ def apply_decode(params, cfg: ModelConfig, token: Array, pos, states, bits,
                                   remat=False)
     logits = lm_head(x, params, cfg, ctx, axes)
     return logits[:, 0], new_states
+
+
+def apply_verify(params, cfg: ModelConfig, tokens: Array, pos, states, bits,
+                 ctx: QuantContext, axes: MeshAxes = NO_AXES):
+    """Speculative multi-token verify: ``tokens (B, S)`` int32 at per-slot
+    absolute positions ``pos (B, S)`` (-1 sentinel rows for inactive
+    slots).  One launch computes logits at every position and overwrites
+    the S cached KV rows per slot with rows computed under THESE params
+    (``attention.verify_attention`` batched append) — for the
+    self-speculative engine that is what replaces the draft policy's rows
+    with the target policy's, so the surviving cache is bitwise the
+    non-speculative one.  Returns (logits (B, S, V) f32, new states)."""
+    x, _ = embed_inputs(params, cfg, {"tokens": tokens}, ctx, axes)
+    x, new_states, _ = run_layers(x, params, bits, cfg, ctx, axes,
+                                  mode="verify", states=states, pos=pos,
+                                  remat=False)
+    return lm_head(x, params, cfg, ctx, axes), new_states
 
 
 # ===========================================================================

@@ -208,7 +208,10 @@ def reconcile(rec: TraceRecorder, stats: Dict[str, Any],
     * token events (``first_token`` + ``token``) == ``tokens_generated``;
     * every admitted request has a complete
       admit → first_token → tokens → complete chain with non-decreasing
-      timestamps, and the request count matches ``completed``.
+      timestamps, and the request count matches ``completed``;
+    * one ``spec_verify`` instant per speculative round, whose
+      ``drafted``/``accepted`` args sum exactly to the engine's
+      ``spec_draft_tokens``/``spec_accepted_tokens`` counters.
     """
     problems: List[str] = []
 
@@ -248,6 +251,24 @@ def reconcile(rec: TraceRecorder, stats: Dict[str, Any],
             problems.append(f"{e.track}: admit reused "
                             f"{e.args['prefix_hit_tokens']} prefix tokens "
                             f"but has no prefix_hit event")
+
+    # speculative rounds: every round emits one spec_verify instant; its
+    # drafted/accepted args must sum exactly to the spec counters, so a
+    # round that lost or double-counted acceptance bookkeeping cannot
+    # reconcile (token identity alone would not catch the stats drifting)
+    verifies = [e for e in rec.events if e.name == "spec_verify"]
+    if len(verifies) != stats.get("spec_rounds", 0):
+        problems.append(f"spec_verify instants {len(verifies)} != "
+                        f"spec_rounds {stats.get('spec_rounds')}")
+    drafted = sum(int(e.args.get("drafted", 0)) for e in verifies)
+    if drafted != stats.get("spec_draft_tokens", 0):
+        problems.append(f"sum(spec_verify drafted) {drafted} != "
+                        f"spec_draft_tokens {stats.get('spec_draft_tokens')}")
+    accepted = sum(int(e.args.get("accepted", 0)) for e in verifies)
+    if accepted != stats.get("spec_accepted_tokens", 0):
+        problems.append(
+            f"sum(spec_verify accepted) {accepted} != "
+            f"spec_accepted_tokens {stats.get('spec_accepted_tokens')}")
 
     reqs = request_summaries(rec.events)
     tokens = sum(r["tokens"] for r in reqs.values())

@@ -114,6 +114,10 @@ ROUTES = RouteTable({
     "matmul": ("dequant-fp", "pallas-int8", "pallas-w4"),
     "decode_attn": ("fused", "fused-interpret", "dequant-fp"),
     "kv_layout": ("ring", "paged"),
+    # how decode tokens are produced: plain target decode, or
+    # self-speculative (the low-bit draft policy proposes, the searched
+    # target policy verifies — launch/engine._spec_round)
+    "spec": ("off", "self"),
 })
 
 

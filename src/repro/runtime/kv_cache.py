@@ -106,6 +106,36 @@ def _ring_append(cache, rows: Dict[str, Array], pos: Array):
     return cache._replace(**upd)
 
 
+def _ring_append_batch(cache, rows: Dict[str, Array], pos: Array):
+    """Batched multi-row variant of :func:`_ring_append` for the per-slot
+    layout (speculative verify): ``rows`` values are ``(B, S, ...)`` token
+    rows landing at absolute positions ``pos (B, S)``.  Same slot rule as
+    the single-row path — ``mod(max(pos, 0), cap)`` — so a sentinel slot
+    (all ``pos = -1``) funnels its S writes onto ring index 0 with
+    ``pos = -1`` stamped there (all S rows carry the same sentinel, so the
+    duplicate-index scatter is value-unambiguous for ``pos``; the codes
+    there are never attendable)."""
+    cap = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = jnp.mod(jnp.maximum(pos, 0), cap)
+    scatter = jax.vmap(lambda c, r, s: c.at[s].set(r))
+    upd = {f: scatter(getattr(cache, f), r, slot) for f, r in rows.items()}
+    upd["pos"] = scatter(cache.pos, pos, slot)
+    return cache._replace(**upd)
+
+
+def _ring_rollback(cache, cut: Array):
+    """Invalidate per-slot ring rows at positions ``>= cut`` (``cut (B,)``)
+    by value — the speculative-decode rejection rewind.  Works on the pos
+    stamps alone, so it is independent of physical ring indices, leaves
+    codes/scales resident (matching :func:`_evict_pos` semantics: a -1
+    position is never valid to attend), and is a no-op for sentinel slots
+    (``pos`` already -1 everywhere)."""
+    cut = jnp.asarray(cut, jnp.int32)
+    mask = (cache.pos >= 0) & (cache.pos >= cut[:, None])
+    return cache._replace(pos=jnp.where(mask, -1, cache.pos))
+
+
 def _evict_pos(cache, slot):
     """Invalidate one slot's rows by stamping its ``pos`` to -1 (codes and
     scales stay resident; a -1 position is never valid to attend)."""
@@ -139,11 +169,21 @@ class FpKVCache(NamedTuple):
     def append(self, k_new: Array, v_new: Array, pos) -> "FpKVCache":
         return _ring_append(self, {"k": k_new, "v": v_new}, pos)
 
+    def append_batch(self, k_new: Array, v_new: Array,
+                     pos: Array) -> "FpKVCache":
+        """Speculative verify: S rows per slot, ``k_new (B, S, KV, hd)``
+        at per-slot absolute positions ``pos (B, S)``."""
+        return _ring_append_batch(self, {"k": k_new, "v": v_new}, pos)
+
     def gather(self) -> "FpKVCache":
         return self            # already the dense per-slot view
 
     def evict(self, slot) -> "FpKVCache":
         return _evict_pos(self, slot)
+
+    def rollback(self, cut: Array) -> "FpKVCache":
+        """Invalidate rows at positions >= ``cut (B,)`` (per-slot only)."""
+        return _ring_rollback(self, cut)
 
     def inventory(self) -> Dict[str, int]:
         return {"codes": _nbytes(self.k, self.v),
@@ -169,11 +209,26 @@ class QuantKVCache(NamedTuple):
         return _ring_append(self, {"k": kq, "v": vq,
                                    "k_scale": ks, "v_scale": vs}, pos)
 
+    def append_batch(self, k_new: Array, v_new: Array,
+                     pos: Array) -> "QuantKVCache":
+        """Speculative verify: quantize-and-write S rows per slot at once
+        (``k_new (B, S, KV, hd)``, ``pos (B, S)``).  ``quantize_rows``
+        reduces over ``hd`` only, so the batched codes/scales are bitwise
+        the single-row :meth:`append`'s."""
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        return _ring_append_batch(self, {"k": kq, "v": vq,
+                                         "k_scale": ks, "v_scale": vs}, pos)
+
     def gather(self) -> "QuantKVCache":
         return self            # already the dense per-slot view
 
     def evict(self, slot) -> "QuantKVCache":
         return _evict_pos(self, slot)
+
+    def rollback(self, cut: Array) -> "QuantKVCache":
+        """Invalidate rows at positions >= ``cut (B,)`` (per-slot only)."""
+        return _ring_rollback(self, cut)
 
     def inventory(self) -> Dict[str, int]:
         return {"codes": _nbytes(self.k, self.v),
@@ -260,6 +315,44 @@ class PagedKVCache(NamedTuple):
             k_scale=self.k_scale.at[pid, row].set(ks[:, 0], mode="drop"),
             v_scale=self.v_scale.at[pid, row].set(vs[:, 0], mode="drop"),
             pos=self.pos.at[pid, row].set(pos, mode="drop"))
+
+    def append_batch(self, k_new: Array, v_new: Array,
+                     pos: Array) -> "PagedKVCache":
+        """Speculative verify: S rows per slot at once — ``k_new (B, S,
+        KV, hd)`` rows land at per-slot absolute positions ``pos (B, S)``
+        (sentinel / out-of-capacity / unmapped rows drop, as in
+        :meth:`append`)."""
+        pos = jnp.asarray(pos, jnp.int32)
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        pid, row = self._target(pos, self.page_table)
+        return self._replace(
+            k=self.k.at[pid, row].set(kq, mode="drop"),
+            v=self.v.at[pid, row].set(vq, mode="drop"),
+            k_scale=self.k_scale.at[pid, row].set(ks, mode="drop"),
+            v_scale=self.v_scale.at[pid, row].set(vs, mode="drop"),
+            pos=self.pos.at[pid, row].set(pos, mode="drop"))
+
+    def rollback(self, cut: Array) -> "PagedKVCache":
+        """Invalidate each slot's rows at positions >= ``cut (B,)`` — the
+        speculative-decode rejection rewind.  Clears the ``pos`` stamps of
+        the slot-private tail pages holding rejected draft rows (codes and
+        scales stay resident, matching :meth:`free_pages` semantics).
+        Safe under copy-on-write sharing by construction: rollback cuts
+        land strictly past the prompt, and only *full* prompt pages are
+        ever registered/shared, so every touched row lives in a fresh
+        refcount-1 page — the property tests gate this."""
+        cut = jnp.asarray(cut, jnp.int32)
+        tbl = self.page_table[0] if self.stacked else self.page_table
+        t = jnp.arange(self.capacity, dtype=jnp.int32)
+        positions = jnp.broadcast_to(t[None], tbl.shape[:1] + t.shape)
+        pid, row = self._target(positions, tbl)
+        pid = jnp.where(positions >= cut[:, None], pid, self.n_pages)
+        if self.stacked:
+            return self._replace(
+                pos=self.pos.at[:, pid, row].set(-1, mode="drop"))
+        return self._replace(
+            pos=self.pos.at[pid, row].set(-1, mode="drop"))
 
     def append_rows(self, k_new: Array, v_new: Array, q_pos: Array,
                     slot) -> "PagedKVCache":
@@ -434,8 +527,10 @@ class KVCache(Protocol):
     """
 
     def append(self, k_new: Array, v_new: Array, pos): ...
+    def append_batch(self, k_new: Array, v_new: Array, pos: Array): ...
     def gather(self): ...
     def evict(self, slot): ...
+    def rollback(self, cut: Array): ...
     def inventory(self) -> Dict[str, int]: ...
 
 

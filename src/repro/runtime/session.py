@@ -314,6 +314,21 @@ class QuantizedSession:
         logits = lm.lm_head(x, params, self.cfg, self.ctx, self.compute_axes)
         return logits[:, 0], new_states
 
+    def verify(self, params, tok, pos, states):
+        """Speculative verify: run S = k+1 tokens per slot in ONE
+        multi-token step over the cached KV (``lm`` mode="verify"),
+        appending all S rows and attending each query only to rows at
+        positions <= its own — via the exact per-route single-token
+        attention primitive, so hidden states and written KV rows are
+        bitwise what S sequential ``decode`` calls would produce.
+        ``tok``/``pos`` are (B, S); returns (logits (B, S, V), states)."""
+        x, _ = lm.embed_inputs(params, self.cfg, {"tokens": tok}, self.ctx,
+                               self.compute_axes)
+        x, new_states = self._forward(params, x, None, "verify", states, pos,
+                                      None)
+        logits = lm.lm_head(x, params, self.cfg, self.ctx, self.compute_axes)
+        return logits, new_states
+
     def append(self, params, tok, pos, slot, last_idx, states):
         """Chunked (paged) prefill: run a (1, C) token chunk through the
         model for ONE slot, writing KV rows at absolute positions ``pos``
@@ -362,6 +377,72 @@ class QuantizedSession:
             validate=lambda p: p.validate(lm.enumerate_qlayers(cfg),
                                           bits=cfg.bits))
         return cls(cfg, params, policy, ctx, axes, **kwargs)
+
+
+def draft_policy(policy: MPQPolicy, qlayers, bits,
+                 draft_w_bits: int = 2) -> MPQPolicy:
+    """Derive the self-speculative DRAFT policy from the searched target.
+
+    Same layers, same a_bits (so activation quantization — and the
+    act-reuse grouping — is bitwise the target's), weights uniformly at
+    ``draft_w_bits``. Both policies select from the SAME trained
+    indicator banks, so the draft costs zero extra trained state: the
+    paper's bit-width menu, read at a second (cheaper) point. The draft
+    width must be one of the searched ``bits`` — otherwise there is no
+    trained bank entry to select and packing would be meaningless."""
+    db = int(draft_w_bits)
+    if db not in {int(b) for b in bits}:
+        raise ValueError(
+            f"draft_w_bits={db} is not in the searched bit set "
+            f"{sorted(int(b) for b in bits)}; the draft policy can only "
+            "read bit-widths the indicator banks were trained for")
+    return MPQPolicy({q.name: db for q in qlayers}, dict(policy.a_bits),
+                     meta={"kind": "spec-draft", "draft_w_bits": db,
+                           "target": dict(policy.meta)})
+
+
+class SpecSession(QuantizedSession):
+    """Dual-policy pack for self-speculative decoding.
+
+    ONE set of trained weights and banks, TWO packed param trees:
+    ``self.params`` is the searched target policy (the quality contract
+    — emitted tokens are its greedy tokens, by construction), and
+    ``self.draft_params`` is a uniform low-bit (int2/int3) repack of the
+    same weights used only to PROPOSE tokens. Both trees run through the
+    same ``_forward`` / engine adapter; the engine jits draft steps
+    against ``draft_params`` and verify steps against ``params``.
+
+    The draft shares the target's a_bits and indicator-bank scales
+    (``draft_policy``), so activation quantization in the draft pass is
+    bitwise the target's — the bank-sharing requirement ``ServeConfig``
+    validates for ``--speculate``."""
+
+    def __init__(self, cfg: ModelConfig, params, policy: MPQPolicy,
+                 ctx: Optional[QuantContext] = None,
+                 axes: MeshAxes = NO_AXES, *, draft_w_bits: int = 2,
+                 mode: str = "packed", **kwargs):
+        if mode != "packed":
+            raise ValueError(
+                "SpecSession packs two policies over one weight set; "
+                "mode='reference' keeps fake-quant params and has nothing "
+                "to dual-pack — build a plain QuantizedSession instead")
+        super().__init__(cfg, params, policy, ctx, axes, mode=mode, **kwargs)
+        self.draft_w_bits = int(draft_w_bits)
+        self.policy_draft = draft_policy(policy, self.qlayers, cfg.bits,
+                                         self.draft_w_bits)
+        # pack the second tree through the same machinery by swapping the
+        # active policy; _site_bits/_shard_plan come out identical (packed
+        # mode, same shapes) so restoring the policy restores the session
+        target_policy, target_health = self.policy, self.pack_health
+        self.policy, self.pack_health = self.policy_draft, {}
+        self.draft_params = self._build_params(params)
+        self.draft_pack_health = self.pack_health
+        self.policy, self.pack_health = target_policy, target_health
+
+    def draft_bytes(self) -> int:
+        """Measured HBM bytes of the draft tree's packed codes — the bytes
+        the roofline charges k times per speculative round."""
+        return packing.tree_packed_bytes(self.draft_params)
 
 
 def _tag_act_groups(sp, packed_paths, site_key: str) -> None:
