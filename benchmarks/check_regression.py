@@ -82,6 +82,14 @@ GATED_QUANT = {
     # (greedy everywhere) — shrinking means the draft repack or the
     # verify/rollback path regressed
     "spec_accept_rate": -1,
+    # elastic precision serving: the traffic ramp must keep trading
+    # precision for load — fewer swaps means the controller stopped
+    # reacting; pool-pressure deferrals growing means the downshift
+    # stopped relieving admission pressure (zero in the baseline, so the
+    # ratio formula can't fire on it alone — the bench hard-asserts the
+    # flat-after-swap flag, mirroring the alerts_fired arrangement)
+    "elastic_swaps": -1,
+    "elastic_admissions_deferred": +1,
 }
 INFO_QUANT = (
     "packed_tok_per_s",
@@ -105,6 +113,12 @@ INFO_QUANT = (
     # spec_speedup_gt_1 flag instead
     "spec_tokens_per_s",
     "spec_speedup_vs_single",
+    # elastic serving shape: re-solve latency is wall-clock (the < 50 ms
+    # floor is a bench hard-assert), downshift/hold counts are workload
+    # color on top of the gated swap count
+    "elastic_ilp_solve_ms_max",
+    "elastic_downshifts",
+    "elastic_swap_holds",
 )
 
 # boolean identity flags checked per profile (False or missing = failure)
@@ -126,6 +140,12 @@ IDENTITY_FLAGS = {
         "shared_prefix_token_identical",
         "spec_token_identical",
         "spec_speedup_gt_1",
+        # elastic_token_identical: every completion of the elastic ramp
+        # must match its generating variant's single-policy reference
+        # elastic_deferred_flat_after_swap: once the controller downshifts,
+        # pool-pressure admission deferrals must stop growing
+        "elastic_token_identical",
+        "elastic_deferred_flat_after_swap",
     ),
 }
 

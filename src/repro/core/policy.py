@@ -78,11 +78,19 @@ class MPQPolicy:
 
     # -- deployment-time validation ----------------------------------------
     def validate(self, qlayers: Sequence[QLayer],
-                 bits: Sequence[int] | None = None) -> "MPQPolicy":
+                 bits: Sequence[int] | None = None,
+                 family: str | None = None) -> "MPQPolicy":
         """Check this policy covers exactly the model's QLayers (and, when
         ``bits`` is given, only searched bit-widths). A stale policy file —
         renamed layers, different depth, foreign arch — fails loudly here
-        instead of silently mis-dispatching in the serving runtime."""
+        instead of silently mis-dispatching in the serving runtime.
+
+        ``family`` is the served indicator-bank fingerprint
+        (``runtime.session.bank_fingerprint``): a policy stamped with
+        ``meta["indicator_family"]`` from a *different* training fails,
+        because its importances — and hence its bit assignment — were
+        learned against scales the served checkpoint does not have. An
+        unstamped policy passes for back-compat with pre-bank files."""
         names = {q.name for q in qlayers}
         covered = set(self.w_bits) & set(self.a_bits)
         unknown = sorted((set(self.w_bits) | set(self.a_bits)) - names)
@@ -104,6 +112,13 @@ class MPQPolicy:
             if bad:
                 problems.append(f"bit-widths {bad} outside searched set "
                                 f"{sorted(allowed)}")
+        if family is not None:
+            stamp = self.meta.get("indicator_family")
+            if stamp is not None and str(stamp) != str(family):
+                problems.append(
+                    f"indicator-bank family {str(stamp)!r} != the served "
+                    f"checkpoint's fingerprint {str(family)!r} (searched "
+                    "from a different training)")
         if problems:
             raise ValueError(
                 "MPQPolicy does not match this model's layer table: "

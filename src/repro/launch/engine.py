@@ -153,6 +153,11 @@ class EngineStats:
     spec_rounds: int = 0  # draft+verify rounds (speculate > 0)
     spec_draft_tokens: int = 0  # tokens the low-bit draft policy proposed
     spec_accepted_tokens: int = 0  # proposals the target policy confirmed
+    policy_swaps: int = 0  # elastic variant hot-swaps applied this epoch
+    policy_swaps_down: int = 0  # swaps that lowered the served avg bits
+    ilp_solves: int = 0  # admission-time MCKP re-solves (elastic)
+    admissions_deferred_swap: int = 0  # admit rounds held for a swap drain
+    active_policy: str = ""  # serving variant id ("" = single-policy)
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
     latency: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -187,7 +192,16 @@ class LMAdapter:
     ``w_bits_total`` accounting attributes) can serve through the engine —
     see ``repro.runtime.session.QuantizedSession`` for the packed
     mixed-precision implementation.
+
+    Elastic serving (``DecodeEngine(elastic=...)``) needs the optional
+    variant-bank extension of this seam — ``active_policy`` naming the
+    serving variant plus ``set_active(pid)`` / ``params_for(pid)``
+    returning pre-packed trees (``runtime.session.ElasticSession``). The
+    default single-policy adapters leave ``active_policy`` empty and
+    carry no bank.
     """
+
+    active_policy = ""  # single policy per process: nothing to attribute
 
     def __init__(self, cfg: ModelConfig, bits, ctx, axes: MeshAxes = NO_AXES):
         self.cfg = cfg
@@ -248,6 +262,7 @@ class _Slot:
         "ts_last_token",
         "spec_drafted",
         "spec_accepted",
+        "policy_id",
     )
 
     def __init__(
@@ -257,6 +272,7 @@ class _Slot:
         now: int,
         ts_admit: float = 0.0,
         ts_last_token: float = 0.0,
+        policy_id: str = "",
     ):
         self.req = req
         self.next_tok = first_tok
@@ -268,6 +284,10 @@ class _Slot:
         self.ts_last_token = ts_last_token  # last emitted token (ITL base)
         self.spec_drafted = 0  # draft proposals made for this slot
         self.spec_accepted = 0  # proposals the target policy confirmed
+        # elastic serving: the variant that admitted this request keeps
+        # serving it to completion (drain-then-swap), so one id covers
+        # every token
+        self.policy_id = policy_id
 
 
 class DecodeEngine:
@@ -283,6 +303,7 @@ class DecodeEngine:
         ecfg: Optional[EngineConfig] = None,
         scheduler: Optional[Scheduler] = None,
         adapter=None,
+        elastic=None,
     ):
         if cfg.encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode step")
@@ -366,6 +387,35 @@ class DecodeEngine:
                 raise ValueError(
                     "speculate > 0 does not support sliding-window archs: "
                     "the ring window overwrites rows a rollback would need"
+                )
+        # elastic serving: an ElasticController re-solves the ILP at
+        # admission time and this engine hot-swaps the active pre-packed
+        # variant between batches (drain-then-swap; _elastic_admission)
+        self.elastic = elastic
+        self._active_policy = str(getattr(adapter, "active_policy", "") or "")
+        self._swap_decision = None
+        self._deferred_seen = 0
+        if elastic is not None:
+            _dispatch.ROUTES.validate("elastic", "bank")
+            if not (
+                hasattr(adapter, "set_active") and hasattr(adapter, "params_for")
+            ):
+                raise ValueError(
+                    "elastic serving needs a variant-bank adapter "
+                    "(runtime.session.ElasticSession): set_active()/"
+                    "params_for() hand back pre-packed policy variants; a "
+                    "single-policy adapter has nothing to hot-swap"
+                )
+            if axes.enabled:
+                raise ValueError(
+                    "elastic serving is single-device for now: a swap would "
+                    "have to re-place every packed shard on the mesh"
+                )
+            if self._spec_k:
+                raise ValueError(
+                    "elastic + speculate is unsupported: the draft pack is "
+                    "derived from ONE target policy and would go stale at "
+                    "the first swap"
                 )
         kv_bits = (
             8.0
@@ -609,6 +659,26 @@ class DecodeEngine:
         self.monitor = obs_monitor.default_monitor(
             pool_min_free=(self._pages_per_slot - 1) if self._paged else None
         )
+        # elastic epoch state: a pending (unapplied) swap decision and the
+        # page-pool deferral watermark the controller diffs against
+        self._swap_decision = None
+        self._deferred_seen = 0
+        if self.elastic is not None:
+            m.gauge(
+                "engine.policy_variants",
+                help="pre-packed policy variants resident in the bank",
+            ).set(len(self.adapter.variants))
+            self._observe_active_policy()
+            if self.trace is not None:
+                # seed the swap-epoch timeline: reconcile validates every
+                # policy-stamped token against the epoch active at its ts,
+                # so epoch zero needs an explicit marker
+                self.trace.instant(
+                    "policy_swap",
+                    to=self._active_policy,
+                    initial=True,
+                    iteration=-1,
+                )
         # optional per-iteration callback (serve --metrics-stream); survives
         # reset() so a streamer set up once covers every epoch
         self.on_step = getattr(self, "on_step", None)
@@ -640,6 +710,94 @@ class DecodeEngine:
             help="free + LRU-evictable pages (admission headroom)",
         ).set(self.pool.available_count)
 
+    # -- elastic precision serving ------------------------------------------
+    def _observe_active_policy(self) -> None:
+        m = self.metrics
+        avg_w, _ = self.adapter.policy.avg_bits()
+        m.gauge(
+            "engine.active_policy_avg_bits",
+            help="mean weight bits of the serving variant",
+        ).set(avg_w)
+        m.counter(f"engine.policy_active.{self._active_policy}").inc()
+        # packed_bytes follows the active variant (ElasticSession accounting
+        # swaps with set_active); refresh so the gauge tracks what serves
+        m.gauge("engine.packed_bytes").set(self.adapter.packed_bytes())
+
+    def _elastic_admission(self, now: int) -> None:
+        """Consult the controller before admitting (drain-then-swap).
+
+        Re-solves EVERY admission round with pending work — the decision
+        self-corrects while slots drain, and the per-solve cost is the
+        tens-of-ms the ``ilp.solve_ms`` histogram polices. A decision for
+        a different variant swaps immediately if the slots are empty;
+        otherwise it parks in ``_swap_decision``, which holds admission
+        (``Scheduler.admit(hold=True)``) until the in-flight requests
+        finish under the variant that admitted them. Decode itself never
+        pauses, so the drain cannot deadlock."""
+        m = self.metrics
+        deferred_now = int(m.value("scheduler.admissions_deferred_pool"))
+        arrived = sum(1 for r in self.scheduler.pending if r.arrival <= now)
+        decision = self.elastic.decide(
+            active=self._active_policy,
+            queue_depth=arrived,
+            occupied=len(self._occupied()),
+            slots=self.ecfg.slots,
+            deferred=max(deferred_now - self._deferred_seen, 0),
+            cache_bytes=float(sum(qkv.tree_inventory(self.state).values())),
+        )
+        self._deferred_seen = deferred_now
+        m.histogram(
+            "ilp.solve_ms", help="admission-time MCKP re-solve wall time"
+        ).observe(decision.solve_ms)
+        m.counter("engine.ilp_solves").inc()
+        if decision.target == self._active_policy:
+            self._swap_decision = None
+            return
+        self._swap_decision = decision
+        if not self._occupied():
+            self._apply_swap(decision, now)
+
+    def _apply_swap(self, decision, now: int) -> None:
+        """Hot-swap the serving variant: ``device_put`` of the adapter's
+        PRE-PACKED tree — never a repack. Runs only on drained slots, so
+        every request's tokens come from exactly one variant."""
+        assert not self._occupied(), "policy swap with occupied slots"
+        t0 = time.perf_counter()
+        self.params = jax.device_put(self.adapter.set_active(decision.target))
+        jax.block_until_ready(self.params)
+        dt = time.perf_counter() - t0
+        prev, self._active_policy = self._active_policy, decision.target
+        self._swap_decision = None
+        m = self.metrics
+        if self._paged:
+            # registered prefix pages hold KV computed under the previous
+            # variant's weights; a post-swap prefix hit would splice stale
+            # numerics into a request that must match its own variant's
+            # single-policy reference bit-for-bit
+            self._clear_freed(self.pool.flush_prefixes())
+            m.gauge("engine.kv_unique_pages").set(self.pool.unique_pages_in_use)
+            self._set_pool_gauges()
+        pols = self.adapter.variant_policies
+        down = pols[decision.target].avg_bits()[0] < pols[prev].avg_bits()[0]
+        m.counter("engine.policy_swaps").inc()
+        m.counter(
+            "engine.policy_swaps_down" if down else "engine.policy_swaps_up"
+        ).inc()
+        m.histogram("engine.swap_ms").observe(dt * 1e3)
+        self._observe_active_policy()
+        if self.trace is not None:
+            self.trace.instant(
+                "policy_swap",
+                ts=self.trace.now(),
+                to=decision.target,
+                from_policy=prev,
+                budget_bits=decision.budget_bits,
+                solver=decision.solver,
+                solve_ms=decision.solve_ms,
+                report=decision.summary(),
+                iteration=now,
+            )
+
     @property
     def stats(self) -> EngineStats:
         """Render the metrics registry into a frozen ``EngineStats``
@@ -655,6 +813,12 @@ class DecodeEngine:
             if isinstance(h, obs_metrics.Histogram) and h.count:
                 lat[f"{key}_p50_ms"] = h.percentile(0.50)
                 lat[f"{key}_p95_ms"] = h.percentile(0.95)
+        solve = m.get("ilp.solve_ms")
+        if isinstance(solve, obs_metrics.Histogram) and solve.count:
+            lat["ilp_solve_p50_ms"] = solve.percentile(0.50)
+            # percentile() clamps to the observed extremes, so 1.0 is the
+            # exact max — the number the < 50 ms paper-claim gate reads
+            lat["ilp_solve_max_ms"] = solve.percentile(1.0)
         return EngineStats(
             iterations=c("iterations"),
             decode_steps=c("decode_steps"),
@@ -678,6 +842,13 @@ class DecodeEngine:
             spec_rounds=int(m.value("spec.rounds")),
             spec_draft_tokens=int(m.value("spec.draft_tokens")),
             spec_accepted_tokens=int(m.value("spec.accepted_tokens")),
+            policy_swaps=c("policy_swaps"),
+            policy_swaps_down=c("policy_swaps_down"),
+            ilp_solves=c("ilp_solves"),
+            admissions_deferred_swap=int(
+                m.value("scheduler.admissions_deferred_swap")
+            ),
+            active_policy=self._active_policy,
             t_prefill_s=m.value("engine.t_prefill_s"),
             t_decode_s=m.value("engine.t_decode_s"),
             latency=lat,
@@ -794,6 +965,7 @@ class DecodeEngine:
             finished_at=now,
             spec_drafted=slot.spec_drafted,
             spec_accepted=slot.spec_accepted,
+            policy_id=slot.policy_id,
         )
         m = self.metrics
         m.counter("engine.completed").inc()
@@ -916,9 +1088,14 @@ class DecodeEngine:
         m.histogram("engine.prefill_ms").observe(dt * 1e3)
         m.histogram("engine.ttft_ms").observe(dt * 1e3)
         obs_health.attribute_latency(m, "matmul", self._matmul_route(), dt)
-        self.slots[idx] = _Slot(req, first, now, ts_admit, ts_admit + dt)
+        self.slots[idx] = _Slot(
+            req, first, now, ts_admit, ts_admit + dt, self._active_policy
+        )
         m.gauge("engine.slot_occupancy").set(len(self._occupied()))
         if self.trace is not None:
+            stamp = (
+                {"policy": self._active_policy} if self._active_policy else {}
+            )
             track = obs_trace.req_track(req.rid)
             self.trace.instant(
                 "admit",
@@ -957,6 +1134,7 @@ class DecodeEngine:
                 ts=ts_admit + dt,
                 rid=req.rid,
                 token=first,
+                **stamp,
             )
         if req.max_new == 1 or first == self.ecfg.eos_id:
             self._mark_done(idx, now)
@@ -1009,9 +1187,14 @@ class DecodeEngine:
         # scheduler's ledger, not the engine's)
         m.histogram("engine.ttft_ms").observe(dt * 1e3)
         obs_health.attribute_latency(m, "matmul", self._matmul_route(), dt)
-        self.slots[idx] = _Slot(req, first, now, ts_admit, ts_admit + dt)
+        self.slots[idx] = _Slot(
+            req, first, now, ts_admit, ts_admit + dt, self._active_policy
+        )
         m.gauge("engine.slot_occupancy").set(len(self._occupied()))
         if self.trace is not None:
+            stamp = (
+                {"policy": self._active_policy} if self._active_policy else {}
+            )
             track = obs_trace.req_track(req.rid)
             self.trace.instant(
                 "admit",
@@ -1036,6 +1219,7 @@ class DecodeEngine:
                 ts=ts_admit + dt,
                 rid=req.rid,
                 token=first,
+                **stamp,
             )
         if req.max_new == 1 or first == self.ecfg.eos_id:
             self._mark_done(idx, now)
@@ -1096,6 +1280,7 @@ class DecodeEngine:
                     rid=s.req.rid,
                     token=int(nxt[i]),
                     iteration=now,
+                    **({"policy": s.policy_id} if s.policy_id else {}),
                 )
             if len(s.gen) >= s.req.max_new or nxt[i] == self.ecfg.eos_id:
                 self._mark_done(i, now)
@@ -1322,6 +1507,7 @@ class DecodeEngine:
                         rid=s.req.rid,
                         token=tkn,
                         iteration=now,
+                        **({"policy": s.policy_id} if s.policy_id else {}),
                     )
             if (
                 len(s.gen) >= s.req.max_new
@@ -1340,6 +1526,8 @@ class DecodeEngine:
                 for i in occ:
                     self._finish(i, now)
         if self.scheduler.has_pending():
+            if self.elastic is not None:
+                self._elastic_admission(now)
             # paged KV: hand the scheduler the pool's worst-case obtainable
             # pages so it defers (FIFO) rather than letting an admission
             # race the pool into exhaustion mid-prefill
@@ -1349,6 +1537,7 @@ class DecodeEngine:
                 len(self._occupied()),
                 page_budget=self.pool.available_count if self._paged else None,
                 page_need=self._pages_per_slot if self._paged else 0,
+                hold=self._swap_decision is not None,
             )
             for req, idx in picks:
                 self._admit(req, idx, now)

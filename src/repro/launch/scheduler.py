@@ -98,6 +98,11 @@ class Completion:
     # cannot attribute
     spec_drafted: int = 0
     spec_accepted: int = 0
+    # elastic serving: id of the packed policy variant that generated
+    # every token of this request ("" when the engine serves one fixed
+    # policy). Drain-then-swap means a single variant per request — the
+    # attribution key for per-variant reference checks
+    policy_id: str = ""
 
 
 class Scheduler:
@@ -157,6 +162,7 @@ class Scheduler:
         occupied: int,
         page_budget: Optional[int] = None,
         page_need: int = 0,
+        hold: bool = False,
     ) -> List[Tuple[Request, int]]:
         """Return [(request, slot)] to admit at iteration ``now``.
 
@@ -169,7 +175,25 @@ class Scheduler:
         deferral round in ``scheduler.admissions_deferred_pool``. The
         fixed policy admits whole rounds into a pool sized for all
         slots, so it ignores the budget.
+
+        ``hold=True`` is the elastic engine's drain-then-swap gate: a
+        pending policy hot-swap admits nothing this round (in-flight
+        slots must drain under the variant that admitted them). Prefill
+        credit still accrues while work waits, and each held round is
+        counted in ``scheduler.admissions_deferred_swap`` so the stats
+        show what the swap cost in admission latency.
         """
+        if hold:
+            if self._arrived(now):
+                self._credit += self.prefill_chunk
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "scheduler.admissions_deferred_swap",
+                        help="admission rounds held while a policy swap "
+                        "drains",
+                    ).inc()
+            self._observe()
+            return []
         if self.policy == "fixed":
             if occupied:
                 return []

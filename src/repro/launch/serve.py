@@ -59,7 +59,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +107,8 @@ class ServeConfig:
     chip_table: Optional[str] = None  # measured device table json (roofline)
     speculate: int = 0          # self-speculative draft length k (0 = off)
     draft_bits: int = 2         # draft policy weight bits (--speculate)
+    elastic: bool = False       # admission-time ILP re-solve + hot-swap
+    policy_variants: str = "3,4,6"  # avg weight-bit budgets of the bank
     sampling: str = "greedy"    # token selection; only greedy exists today
     seed: int = 0
 
@@ -176,6 +178,49 @@ class ServeConfig:
             raise ValueError(
                 f"unknown sampling mode {self.sampling!r}; the engine "
                 "decodes greedily (argmax)")
+        dispatch.ROUTES.validate("elastic", "bank" if self.elastic else "off")
+        if self.elastic:
+            if not self.policy_path:
+                raise ValueError(
+                    "--elastic needs --policy <searched.json>: the variant "
+                    "bank searches its budgets over the SAME indicator "
+                    "banks the base policy was searched from, and the base "
+                    "policy anchors that family")
+            if self.speculate:
+                raise ValueError(
+                    "--elastic is incompatible with --speculate: the draft "
+                    "pack pairs with ONE target policy and would go stale "
+                    "at the first hot-swap")
+            if self.mesh:
+                raise ValueError(
+                    "--elastic is single-device for now: a hot-swap would "
+                    "have to re-place every packed shard on the mesh")
+            if self.schedule == "fixed":
+                raise ValueError(
+                    "--elastic needs a continuous schedule: the controller "
+                    "re-solves against the live admission stream, which "
+                    "the fixed policy drains in whole rounds")
+            if self.kv == "fp":
+                raise ValueError(
+                    "--elastic requires --kv int8: the variant bank is a "
+                    "packed-session feature (pre-packed trees to swap)")
+            self.variant_budgets  # malformed --policy-variants fails HERE
+
+    @property
+    def variant_budgets(self) -> Tuple[float, ...]:
+        """``--policy-variants`` parsed to sorted avg weight-bit budgets."""
+        try:
+            vals = tuple(float(x) for x in self.policy_variants.split(","))
+        except ValueError:
+            raise ValueError(
+                "--policy-variants must be comma-separated average "
+                f"weight-bit budgets, got {self.policy_variants!r}")
+        if len(vals) < 2 or len(set(vals)) != len(vals):
+            raise ValueError(
+                "--policy-variants needs >= 2 distinct budgets "
+                f"(a one-variant bank cannot degrade), got "
+                f"{self.policy_variants!r}")
+        return tuple(sorted(vals))
 
     @property
     def resolved_cache_len(self) -> int:
@@ -197,7 +242,8 @@ class ServeConfig:
             page_size=args.page_size, decode_attn=args.decode_attn,
             mesh=args.mesh, bucket=not args.no_bucket,
             chip_table=args.chip_table, speculate=args.speculate,
-            draft_bits=args.draft_bits, seed=args.seed)
+            draft_bits=args.draft_bits, elastic=args.elastic,
+            policy_variants=args.policy_variants, seed=args.seed)
 
     @property
     def chip(self):
@@ -531,6 +577,90 @@ def resolve_axes(args, cfg):
     return sharding.make_axes_for(cfg, mesh, shard_seq=False), label
 
 
+def serve_elastic(args, scfg: ServeConfig, cfg, params, ctx, reqs):
+    """The ``--elastic`` path: variant bank + admission-time ILP re-solve.
+
+    Builds an ``ElasticSession`` holding one pre-packed tree per
+    ``--policy-variants`` budget (all searched over the same indicator
+    banks, family-stamped against this checkpoint), hands the engine an
+    ``ElasticController``, and serves the request ramp. Under ``--smoke``
+    three things are gated hard: (1) the ramp must trigger at least one
+    DOWNSHIFT swap (the engine degrades precision instead of queueing),
+    (2) every admission-time re-solve must close under 50 ms (the paper's
+    ~0.06 s claim, load-bearing on the hot path), and (3) each
+    completion's tokens must be bitwise identical to its generating
+    variant's offline single-policy reference — a swap may change WHO
+    serves the next request, never WHAT an admitted request decodes."""
+    from repro.launch import elastic as elastic_mod
+    from repro.runtime.session import ElasticSession, bank_fingerprint
+
+    base = MPQPolicy.load(scfg.policy_path)
+    ql = lm.enumerate_qlayers(cfg)
+    try:
+        base.validate(ql, bits=cfg.bits)
+        bank = elastic_mod.build_variant_bank(
+            ql, cfg.bits, scfg.variant_budgets,
+            family=bank_fingerprint(params))
+        sess = ElasticSession(cfg, params, bank.policies, ctx,
+                              kv_quant=scfg.session_kv, active=bank.full)
+    except ValueError as e:
+        raise SystemExit(f"--elastic: {e}")
+    ctrl = elastic_mod.ElasticController(
+        cfg, bank, slots=scfg.slots, cache_len=scfg.resolved_cache_len,
+        chip=scfg.chip)
+    eng = DecodeEngine(sess.params, cfg, None, ctx, NO_AXES,
+                       scfg.engine_config(), adapter=sess, elastic=ctrl)
+    streamer = attach_stream(args, eng)
+    eng.submit_all(reqs)
+    completions = eng.run()
+    print_stats(f"elastic/{args.schedule}", eng)
+    export_obs(args, eng)
+    st = eng.stats
+    per_variant = {}
+    for c in completions.values():
+        per_variant.setdefault(c.policy_id, []).append(c.rid)
+    budgets = ",".join(f"{b:g}" for b in scfg.variant_budgets)
+    print(f"elastic bank [{budgets}] avg-bit budgets | {st.policy_swaps} "
+          f"swap(s), {st.policy_swaps_down} down | {st.ilp_solves} "
+          f"admission re-solves, max {ctrl.max_solve_ms:.1f} ms | held "
+          f"{st.admissions_deferred_swap} round(s) for drains | final "
+          f"variant {st.active_policy}")
+    for pid in sorted(per_variant):
+        print(f"  {pid}: {len(per_variant[pid])} request(s) "
+              f"{sorted(per_variant[pid])}")
+    if args.smoke:
+        check_trace(eng, "elastic")
+        if st.policy_swaps_down < 1:
+            raise SystemExit(
+                "elastic smoke: the traffic ramp triggered no downshift "
+                "swap — the controller never traded precision for load")
+        if ctrl.max_solve_ms >= 50.0:
+            raise SystemExit(
+                f"elastic smoke: admission-time ILP re-solve took "
+                f"{ctrl.max_solve_ms:.1f} ms (>= 50 ms budget; the paper's "
+                "~0.06 s one-shot search claim is load-bearing here)")
+        for pid, rids in sorted(per_variant.items()):
+            vbits = lm.bits_from_policy(cfg, bank.policies[pid])
+            ref = DecodeEngine(
+                params, cfg, vbits, ctx, NO_AXES,
+                scfg.engine_config(
+                    kv_quant="fake" if scfg.session_kv == "int8" else "none",
+                    calibrated=False))
+            ref.submit_all([r for r in reqs if r.rid in set(rids)])
+            ref_out = ref.run()
+            bad = [rid for rid in rids
+                   if ref_out[rid].tokens != completions[rid].tokens]
+            if bad:
+                raise SystemExit(
+                    f"elastic variant {pid} diverged from its single-policy "
+                    f"reference on rids {bad}")
+        print(f"per-variant tokens identical with each generating "
+              f"variant's single-policy reference ({len(completions)} "
+              f"requests across {len(per_variant)} variant(s))")
+    finish_stream(args, eng, streamer)
+    return eng, completions
+
+
 def serve_quantized(args, scfg: ServeConfig, cfg, params, ctx, reqs,
                     axes=NO_AXES):
     """The ``--policy`` path: pack a searched policy into a
@@ -728,6 +858,17 @@ def main(argv=None):
                     help="draft policy weight bit-width for --speculate; "
                          "must be one of the arch's searched widths so the "
                          "draft grid shares the indicator-bank scales")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic precision serving: pack a bank of policy "
+                         "variants (--policy-variants budgets, searched on "
+                         "the same indicator banks as --policy), re-solve "
+                         "the ILP at admission time against live load, and "
+                         "hot-swap the active variant between batches "
+                         "(device_put of a pre-packed tree — no repacking)")
+    ap.add_argument("--policy-variants", default="3,4,6", metavar="BITS",
+                    help="comma-separated average weight-bit budgets of the "
+                         "--elastic variant bank; each must lie inside the "
+                         "arch's searched bit range")
     ap.add_argument("--mesh", default=None,
                     help="serve under a device mesh: host ((1,)) | host8 "
                          "(2-way data x 4-way tensor parallel; needs "
@@ -786,7 +927,10 @@ def main(argv=None):
                              "compares the engine against the fixed path")
         args.compare = True
         args.stagger = True
-        args.requests = min(args.requests, 6)
+        # the elastic smoke needs a queue deep enough to overload the
+        # slots (that is what triggers a downshift swap), so its cap is
+        # looser than the single-policy one
+        args.requests = min(args.requests, 12 if args.elastic else 6)
         args.prompt_len = min(args.prompt_len, 16)
         args.gen = min(args.gen, 8)
 
@@ -821,7 +965,10 @@ def main(argv=None):
         # resolved both at build (roofline accounting) and at trace time
         forced = None if scfg.decode_attn == "auto" else scfg.decode_attn
         with dispatch.force_decode_attn(forced):
-            serve_quantized(args, scfg, cfg, params, ctx, reqs, axes)
+            if scfg.elastic:
+                serve_elastic(args, scfg, cfg, params, ctx, reqs)
+            else:
+                serve_quantized(args, scfg, cfg, params, ctx, reqs, axes)
         return
 
     if axes.enabled and jax.default_backend() != "tpu":

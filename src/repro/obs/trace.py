@@ -211,7 +211,11 @@ def reconcile(rec: TraceRecorder, stats: Dict[str, Any],
       timestamps, and the request count matches ``completed``;
     * one ``spec_verify`` instant per speculative round, whose
       ``drafted``/``accepted`` args sum exactly to the engine's
-      ``spec_draft_tokens``/``spec_accepted_tokens`` counters.
+      ``spec_draft_tokens``/``spec_accepted_tokens`` counters;
+    * elastic traces: ``policy_swap`` events define swap epochs — every
+      policy-stamped token must fall in its variant's epoch, every
+      request stays within one variant, and the swap count and final
+      epoch match ``policy_swaps`` / ``active_policy``.
     """
     problems: List[str] = []
 
@@ -269,6 +273,57 @@ def reconcile(rec: TraceRecorder, stats: Dict[str, Any],
         problems.append(
             f"sum(spec_verify accepted) {accepted} != "
             f"spec_accepted_tokens {stats.get('spec_accepted_tokens')}")
+
+    # elastic swap epochs: policy_swap events partition the trace into
+    # epochs, each serving ONE variant. Every policy-stamped token must
+    # match the epoch active at its timestamp, every request must stay
+    # inside a single variant (drain-then-swap admits nothing mid-swap),
+    # the non-initial swap count must equal the policy_swaps counter, and
+    # the last epoch must be the variant the stats say is active. Gated
+    # on the events being present, so single-policy traces skip it —
+    # reconcile no longer ASSUMES one policy per trace, it verifies it
+    # per epoch.
+    swaps = sorted((e for e in rec.events if e.name == "policy_swap"),
+                   key=lambda e: e.ts)
+    if swaps:
+        real = [e for e in swaps if not e.args.get("initial")]
+        if len(real) != stats.get("policy_swaps", 0):
+            problems.append(f"policy_swap events {len(real)} != "
+                            f"policy_swaps {stats.get('policy_swaps')}")
+        if not swaps[0].args.get("initial"):
+            problems.append("trace has policy_swap events but no initial "
+                            "epoch marker (initial=true)")
+        marks = [(e.ts, str(e.args.get("to", ""))) for e in swaps]
+        active_stat = str(stats.get("active_policy", ""))
+        if active_stat and marks[-1][1] != active_stat:
+            problems.append(f"last swap epoch {marks[-1][1]!r} != stats "
+                            f"active_policy {active_stat!r}")
+
+        def epoch_at(ts: float) -> str:
+            cur = marks[0][1]
+            for t, pid in marks:
+                if t <= ts:
+                    cur = pid
+                else:
+                    break
+            return cur
+
+        variants_by_track: Dict[str, set] = {}
+        for ev in rec.events:
+            if ev.name in TOKEN_EVENTS and "policy" in ev.args:
+                pid = str(ev.args["policy"])
+                variants_by_track.setdefault(ev.track, set()).add(pid)
+                expected = epoch_at(ev.ts)
+                if pid != expected:
+                    problems.append(
+                        f"{ev.track}: {ev.name} stamped {pid!r} inside the "
+                        f"{expected!r} swap epoch (ts {ev.ts:.6f})")
+        for track, pids in sorted(variants_by_track.items()):
+            if len(pids) > 1:
+                problems.append(
+                    f"{track}: tokens span policy variants {sorted(pids)} "
+                    "— a request must drain under the variant that "
+                    "admitted it")
 
     reqs = request_summaries(rec.events)
     tokens = sum(r["tokens"] for r in reqs.values())

@@ -118,6 +118,10 @@ ROUTES = RouteTable({
     # self-speculative (the low-bit draft policy proposes, the searched
     # target policy verifies — launch/engine._spec_round)
     "spec": ("off", "self"),
+    # which policy serves: one immutable policy per process, or a
+    # pre-packed variant bank whose active member the admission-time ILP
+    # re-solve hot-swaps between batches (launch/elastic.py)
+    "elastic": ("off", "bank"),
 })
 
 

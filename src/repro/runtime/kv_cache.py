@@ -720,6 +720,18 @@ class PagePool:
         _, pages = self._registry.popitem(last=False)
         return self.release(pages)
 
+    def flush_prefixes(self) -> List[int]:
+        """Unpin EVERY registered prefix chain; returns all page ids that
+        became free. The elastic engine calls this at a policy hot-swap:
+        registered pages hold KV computed under the *previous* variant's
+        weights, so a post-swap ``lookup_prefix`` hit would splice stale
+        numerics into a request that must match its variant's single-policy
+        reference bit-for-bit."""
+        freed: List[int] = []
+        while self._registry:
+            freed.extend(self.drop_lru_prefix())
+        return freed
+
     # -- accounting / invariants --------------------------------------------
     @property
     def free_count(self) -> int:

@@ -46,10 +46,12 @@ no packing) for A/B debugging of the packing itself.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import hashlib
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.policy import MPQPolicy
@@ -443,6 +445,129 @@ class SpecSession(QuantizedSession):
         """Measured HBM bytes of the draft tree's packed codes — the bytes
         the roofline charges k times per speculative round."""
         return packing.tree_packed_bytes(self.draft_params)
+
+
+def bank_fingerprint(params) -> str:
+    """Fingerprint of the trained indicator-bank scales.
+
+    Hashes every ``s_w`` / ``s_a`` leaf in sorted-path order. Policy
+    variants searched over the same banks carry this stamp in
+    ``meta["indicator_family"]``; ``MPQPolicy.validate(family=...)`` then
+    rejects a bundle mixing variants from different trainings — their bit
+    assignments were learned against scales this checkpoint does not
+    have, and a hot-swap between them would break the shared
+    activation-quantization contract the token-identity gate relies on.
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    picked = []
+    for path, leaf in leaves:
+        keys = tuple(str(getattr(p, "key", getattr(p, "name",
+                                                   getattr(p, "idx", p))))
+                     for p in path)
+        if keys and keys[-1] in ("s_w", "s_a"):
+            picked.append((keys, leaf))
+    if not picked:
+        raise ValueError(
+            "no indicator-bank scale leaves (s_w/s_a) in params: cannot "
+            "fingerprint the bank family — was this checkpoint trained "
+            "with learned importance indicators?")
+    h = hashlib.sha1()
+    for keys, leaf in sorted(picked, key=lambda kv: kv[0]):
+        h.update("/".join(keys).encode())
+        h.update(np.asarray(leaf, np.float32).tobytes())
+    return h.hexdigest()[:16]
+
+
+class ElasticSession(QuantizedSession):
+    """Policy-variant bank for elastic precision serving.
+
+    ONE set of trained weights and indicator banks, N packed param trees
+    — one per ``MPQPolicy`` variant (e.g. 3/4/6-bit average budgets
+    searched over the same banks; ``launch.elastic.build_variant_bank``).
+    Every variant packs ONCE at build through the same policy-swap
+    machinery ``SpecSession`` dual-packs with; serving then switches the
+    active tree between batches via ``set_active`` — the engine
+    ``device_put``s the returned pre-packed tree, so no repacking ever
+    happens on the hot path.
+
+    Build fails loudly if any variant's ``meta["indicator_family"]``
+    stamp disagrees with ``bank_fingerprint(params)``: variants searched
+    from different trainings do not share the activation-quantization
+    contract a hot-swap assumes.
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 variants: Mapping[str, MPQPolicy],
+                 ctx: Optional[QuantContext] = None,
+                 axes: MeshAxes = NO_AXES, *, active: Optional[str] = None,
+                 mode: str = "packed", **kwargs):
+        if mode != "packed":
+            raise ValueError(
+                "ElasticSession packs N policy variants over one weight "
+                "set; mode='reference' keeps fake-quant params and has "
+                "nothing to swap — build a plain QuantizedSession instead")
+        items = [(str(pid), pol) for pid, pol in variants.items()]
+        if len(items) < 2:
+            raise ValueError(
+                "ElasticSession needs >= 2 policy variants; a single "
+                "policy is a plain QuantizedSession")
+        family = bank_fingerprint(params)
+        qlayers = lm.enumerate_qlayers(cfg)
+        for pid, pol in items:
+            try:
+                pol.validate(qlayers, bits=cfg.bits, family=family)
+            except ValueError as e:
+                raise ValueError(f"policy variant {pid!r}: {e}") from e
+        by_id = dict(items)
+        active = items[0][0] if active is None else str(active)
+        if active not in by_id:
+            raise ValueError(
+                f"active variant {active!r} not in bank {sorted(by_id)}")
+        super().__init__(cfg, params, by_id[active], ctx, axes, mode=mode,
+                         **kwargs)
+        self.family = family
+        self.active_policy = active
+        self.variant_policies: Dict[str, MPQPolicy] = by_id
+        self.variants: Dict[str, Any] = {active: self.params}
+        self.variant_pack_health: Dict[str, Dict[str, Dict[str, float]]] = {
+            active: self.pack_health}
+        for pid, pol in items:
+            if pid == active:
+                continue
+            # pack through the same machinery by swapping the active
+            # policy (the SpecSession dual-pack pattern): _site_bits /
+            # _shard_plan come out identical in packed mode, so restoring
+            # the policy restores the session
+            keep_policy, keep_health = self.policy, self.pack_health
+            self.policy, self.pack_health = pol, {}
+            self.variants[pid] = self._build_params(params)
+            self.variant_pack_health[pid] = self.pack_health
+            self.policy, self.pack_health = keep_policy, keep_health
+
+    # -- variant bank -------------------------------------------------------
+    def params_for(self, pid: str):
+        """The pre-packed param tree of one variant (no packing here)."""
+        return self.variants[str(pid)]
+
+    def set_active(self, pid: str):
+        """Make ``pid`` the serving variant — accounting (``policy``,
+        ``pack_health``, ``packed_bytes``) follows the swap — and return
+        its pre-packed tree for the engine to ``device_put``."""
+        pid = str(pid)
+        if pid not in self.variants:
+            raise KeyError(
+                f"unknown policy variant {pid!r}: {sorted(self.variants)}")
+        self.active_policy = pid
+        self.policy = self.variant_policies[pid]
+        self.pack_health = self.variant_pack_health[pid]
+        self.params = self.variants[pid]
+        return self.params
+
+    def variant_bytes(self) -> Dict[str, int]:
+        """Measured packed-code HBM bytes per resident variant — what
+        keeping the whole bank on-device costs."""
+        return {pid: packing.tree_packed_bytes(tree)
+                for pid, tree in self.variants.items()}
 
 
 def _tag_act_groups(sp, packed_paths, site_key: str) -> None:

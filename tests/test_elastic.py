@@ -1,0 +1,359 @@
+"""Elastic precision serving: indicator-bank fingerprinting, variant-bank
+construction, the admission-time ILP controller (deterministic given
+frozen signals, load-aware, hysteretic), drain-then-swap engine
+invariants — property-tested over random arrival schedules on BOTH the
+ring and paged KV layouts — and the swap-epoch trace reconcile."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import smoke_config
+from repro.dist.axes import NO_AXES
+from repro.launch import elastic
+from repro.launch.engine import DecodeEngine, EngineConfig
+from repro.launch.scheduler import Request, Scheduler
+from repro.models import lm
+from repro.models.quant_layers import QuantContext
+from repro.obs import metrics, trace
+from repro.runtime import packing
+from repro.runtime.session import ElasticSession, bank_fingerprint
+
+CACHE_LEN = 32
+SLOTS = 2
+BUDGETS = (3.0, 4.0, 6.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("limpq-demo")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext.make(cfg.bits, cfg.quant_act_signed,
+                            compute_dtype=jnp.float32)
+    ql = lm.enumerate_qlayers(cfg)
+    family = bank_fingerprint(params)
+    bank = elastic.build_variant_bank(ql, cfg.bits, BUDGETS, family=family)
+    sess = ElasticSession(cfg, params, bank.policies, ctx, active=bank.full)
+    return dict(cfg=cfg, params=params, ctx=ctx, ql=ql, family=family,
+                bank=bank, sess=sess)
+
+
+def _requests(cfg, specs, seed=7):
+    """specs: [(prompt_len, max_new, arrival_gap)] -> staggered Requests."""
+    data_rng = np.random.default_rng(seed)
+    reqs, arrival = [], 0
+    for i, (p, g, gap) in enumerate(specs):
+        arrival += gap
+        toks = data_rng.integers(0, cfg.vocab, size=p).astype(np.int32)
+        reqs.append(Request(rid=i, tokens=toks, max_new=g, arrival=arrival))
+    return reqs
+
+
+def _run_elastic(setup, reqs, layout="ring"):
+    """One elastic serve over the module bank; always restarts on the
+    largest variant so every run sees the same downshift opportunity."""
+    cfg, bank, sess = setup["cfg"], setup["bank"], setup["sess"]
+    sess.set_active(bank.full)
+    ctrl = elastic.ElasticController(cfg, bank, slots=SLOTS,
+                                     cache_len=CACHE_LEN)
+    eng = DecodeEngine(
+        sess.params, cfg, None, setup["ctx"], NO_AXES,
+        EngineConfig(slots=SLOTS, cache_len=CACHE_LEN, kv_quant="int8",
+                     kv_layout=layout),
+        adapter=sess, elastic=ctrl)
+    eng.submit_all(reqs)
+    return eng, ctrl, eng.run()
+
+
+def _check_against_references(setup, reqs, out):
+    """Every completion must be bitwise identical to its STAMPED variant's
+    offline single-policy run — the elastic invariant: a swap changes who
+    serves the next request, never what an admitted request decodes."""
+    cfg, bank = setup["cfg"], setup["bank"]
+    per_variant = {}
+    for c in out.values():
+        assert c.policy_id in bank.policies, c.policy_id
+        per_variant.setdefault(c.policy_id, []).append(c.rid)
+    for pid, rids in sorted(per_variant.items()):
+        vbits = lm.bits_from_policy(cfg, bank.policies[pid])
+        ref = DecodeEngine(
+            setup["params"], cfg, vbits, setup["ctx"], NO_AXES,
+            EngineConfig(slots=SLOTS, cache_len=CACHE_LEN, kv_quant="fake"))
+        ref.submit_all([r for r in reqs if r.rid in set(rids)])
+        ref_out = ref.run()
+        for rid in rids:
+            assert out[rid].tokens == ref_out[rid].tokens, (pid, rid)
+    return per_variant
+
+
+# ---------------------------------------------------------------------------
+# indicator-bank fingerprint + family-stamped validate
+# ---------------------------------------------------------------------------
+def test_bank_fingerprint_deterministic_and_scale_sensitive(setup):
+    params = setup["params"]
+    assert bank_fingerprint(params) == setup["family"]
+    assert len(setup["family"]) == 16
+
+    def bump(path, leaf):
+        key = str(getattr(path[-1], "key", getattr(path[-1], "name",
+                                                   path[-1])))
+        return leaf * 1.5 if key == "s_w" else leaf
+
+    other = jax.tree_util.tree_map_with_path(bump, params)
+    assert bank_fingerprint(other) != setup["family"]
+
+
+def test_validate_accepts_family_and_rejects_foreign(setup):
+    pol = next(iter(setup["bank"].policies.values()))
+    assert pol.meta["indicator_family"] == setup["family"]
+    pol.validate(setup["ql"], bits=setup["cfg"].bits, family=setup["family"])
+    with pytest.raises(ValueError, match="family"):
+        pol.validate(setup["ql"], bits=setup["cfg"].bits, family="0" * 16)
+    # an unstamped policy predates the bank machinery: it must still pass
+    bare = copy.deepcopy(pol)
+    bare.meta.pop("indicator_family", None)
+    bare.validate(setup["ql"], bits=setup["cfg"].bits, family="0" * 16)
+
+
+# ---------------------------------------------------------------------------
+# variant bank
+# ---------------------------------------------------------------------------
+def test_variant_bank_budgets_stamps_and_monotone_sizes(setup):
+    bank, family = setup["bank"], setup["family"]
+    assert list(bank.policies) == [elastic.variant_id(b) for b in BUDGETS]
+    sizes = [bank.size_bits[pid] for pid in bank.policies]
+    assert sizes == sorted(sizes) and len(set(sizes)) == len(sizes)
+    assert bank.full == elastic.variant_id(max(BUDGETS))
+    assert bank.floor == elastic.variant_id(min(BUDGETS))
+    for budget, (pid, pol) in zip(BUDGETS, bank.policies.items()):
+        assert pol.meta["policy_id"] == pid
+        assert pol.meta["avg_bits_budget"] == budget
+        assert pol.meta["indicator_family"] == family
+        # the searched assignment respects its average-bit budget
+        assert pol.avg_bits()[0] <= budget + 1e-9
+
+
+def test_variant_bank_rejects_degenerate_budgets(setup):
+    ql, bits = setup["ql"], setup["cfg"].bits
+    with pytest.raises(ValueError):
+        elastic.build_variant_bank(ql, bits, (4.0,))
+    with pytest.raises(ValueError):
+        elastic.build_variant_bank(ql, bits, (4.0, 4.0))
+    with pytest.raises(ValueError):
+        elastic.build_variant_bank(ql, bits, (4.0, 99.0))
+
+
+def test_elastic_session_rejects_foreign_family_and_tiny_bank(setup):
+    cfg, params, ctx = setup["cfg"], setup["params"], setup["ctx"]
+    foreign = {pid: copy.deepcopy(pol)
+               for pid, pol in setup["bank"].policies.items()}
+    next(iter(foreign.values())).meta["indicator_family"] = "0" * 16
+    with pytest.raises(ValueError, match="family"):
+        ElasticSession(cfg, params, foreign, ctx)
+    one = {"w4": next(iter(setup["bank"].policies.values()))}
+    with pytest.raises(ValueError, match=">= 2"):
+        ElasticSession(cfg, params, one, ctx)
+    with pytest.raises(ValueError, match="active"):
+        ElasticSession(cfg, params, setup["bank"].policies, ctx,
+                       active="w99")
+
+
+# ---------------------------------------------------------------------------
+# admission-time controller
+# ---------------------------------------------------------------------------
+def test_controller_deterministic_given_frozen_signals(setup):
+    bank = setup["bank"]
+    ctrl = elastic.ElasticController(setup["cfg"], bank, slots=SLOTS,
+                                     cache_len=CACHE_LEN)
+    signals = dict(active=bank.full, queue_depth=3, occupied=SLOTS,
+                   slots=SLOTS, deferred=1)
+    d1 = ctrl.decide(**signals)
+    d2 = ctrl.decide(**signals)
+    assert d1.target == d2.target
+    assert d1.budget_bits == d2.budget_bits
+    assert d1.report.chosen_w == d2.report.chosen_w
+    assert d1.report.chosen_a == d2.report.chosen_a
+    assert d1.solve_ms > 0.0  # wall clock only enters the telemetry
+
+
+def test_controller_downshifts_under_load_and_holds_upshift(setup):
+    bank = setup["bank"]
+    ctrl = elastic.ElasticController(setup["cfg"], bank, slots=SLOTS,
+                                     cache_len=CACHE_LEN)
+    idle = ctrl.decide(active=bank.full, queue_depth=0, occupied=0,
+                       slots=SLOTS)
+    assert idle.target == bank.full
+    loaded = ctrl.decide(active=bank.full, queue_depth=6, occupied=SLOTS,
+                         slots=SLOTS, deferred=2)
+    assert bank.size_bits[loaded.target] < bank.size_bits[bank.full]
+    # hysteresis: while ANYTHING is queued the controller never upshifts —
+    # re-raising precision under backlog would immediately re-queue
+    held = ctrl.decide(active=bank.floor, queue_depth=1, occupied=0,
+                       slots=SLOTS)
+    assert held.target == bank.floor
+    clear = ctrl.decide(active=bank.floor, queue_depth=0, occupied=0,
+                        slots=SLOTS)
+    assert clear.target == bank.full
+
+
+# ---------------------------------------------------------------------------
+# drain-then-swap engine: the deterministic ramp
+# ---------------------------------------------------------------------------
+RAMP = [(8, 6, 0)] + [(8, 6, 1)] * 7  # one request per tick, 2 slots
+
+
+def test_ramp_downshifts_drains_and_matches_references(setup, monkeypatch):
+    reqs = _requests(setup["cfg"], RAMP)
+    # the hot-path contract: NOTHING repacks after the session is built —
+    # swaps device_put pre-packed trees
+    calls = {"n": 0}
+    real = packing.pack_linear
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(packing, "pack_linear", counting)
+    eng, ctrl, out = _run_elastic(setup, reqs)
+    assert calls["n"] == 0, "policy swap repacked weights on the hot path"
+
+    stats = eng.stats
+    assert stats.policy_swaps >= 1
+    assert stats.policy_swaps_down >= 1
+    assert stats.ilp_solves >= 1
+    assert ctrl.max_solve_ms > 0.0
+    # at least one admission round held while in-flight slots drained
+    assert stats.admissions_deferred_swap >= 1
+    assert sorted(out) == [r.rid for r in reqs]
+    assert all(s is None for s in eng.slots)
+    per_variant = _check_against_references(setup, reqs, out)
+    assert len(per_variant) >= 2  # the ramp actually exercised a swap
+    assert stats.active_policy == setup["sess"].active_policy
+    problems = trace.reconcile(eng.trace, stats.as_dict())
+    assert problems == [], problems
+
+
+# ---------------------------------------------------------------------------
+# satellite property: arbitrary swap points never perturb in-flight
+# requests — ring AND paged layouts
+# ---------------------------------------------------------------------------
+@settings(max_examples=4)
+@given(st.lists(st.tuples(st.sampled_from([4, 6, 8]),   # prompt length
+                          st.integers(1, 4),            # max_new
+                          st.integers(0, 2)),           # arrival gap
+                min_size=2, max_size=7))
+def test_swap_points_never_perturb_inflight_kv(setup, specs):
+    """Property: whatever arrival pattern (hence whatever swap points the
+    controller picks), every request completes under exactly one variant,
+    its tokens bitwise match that variant's single-policy reference, and
+    the KV contract holds — no slot leaks (ring) and no page-refcount
+    leaks beyond the pinned prefix registry (paged)."""
+    reqs = _requests(setup["cfg"], specs, seed=11)
+    for layout in ("ring", "paged"):
+        eng, _, out = _run_elastic(setup, reqs, layout=layout)
+        assert sorted(out) == [r.rid for r in reqs], layout
+        assert all(s is None for s in eng.slots), layout
+        _check_against_references(setup, reqs, out)
+        problems = trace.reconcile(eng.trace, eng.stats.as_dict())
+        assert problems == [], (layout, problems)
+        if layout == "paged":
+            # every remaining reference is a prefix-registry pin: slots
+            # released everything they held, swaps flushed stale chains
+            pinned = sum(len(chain)
+                         for chain in eng.pool._registry.values())
+            assert sum(eng.pool.refcount) == pinned
+
+
+# ---------------------------------------------------------------------------
+# scheduler hold + engine wiring guards
+# ---------------------------------------------------------------------------
+def test_scheduler_hold_defers_without_dropping():
+    reg = metrics.MetricsRegistry()
+    sched = Scheduler(prefill_chunk=64, metrics=reg)
+    sched.submit(Request(rid=0, tokens=np.zeros(4, np.int32), max_new=2))
+    assert sched.admit(0, [0, 1], 0, hold=True) == []
+    assert sched.has_pending()
+    assert reg.value("scheduler.admissions_deferred_swap") == 1
+    admitted = sched.admit(1, [0, 1], 0)
+    assert [r.rid for r, _ in admitted] == [0]
+
+
+def test_engine_rejects_elastic_without_bank_adapter(setup):
+    cfg = setup["cfg"]
+    ctrl = elastic.ElasticController(cfg, setup["bank"], slots=SLOTS,
+                                     cache_len=CACHE_LEN)
+    bits = lm.bits_uniform(cfg, 4)
+    with pytest.raises(ValueError, match="variant-bank"):
+        DecodeEngine(setup["params"], cfg, bits, setup["ctx"], NO_AXES,
+                     EngineConfig(slots=SLOTS, cache_len=CACHE_LEN),
+                     elastic=ctrl)
+
+
+# ---------------------------------------------------------------------------
+# swap-epoch trace reconcile (synthetic)
+# ---------------------------------------------------------------------------
+def _swap_trace(initial=True, stamp="w3", span=False):
+    """Two requests: rid 0 decodes under w6, a swap to w3 lands between
+    them, rid 1's first token is stamped ``stamp``. ``span`` mis-stamps
+    rid 0's second token as w3 (a request crossing variants)."""
+    rec = trace.TraceRecorder()
+    if initial:
+        rec.instant("policy_swap", ts=0.0, to="w6", initial=True,
+                    iteration=-1)
+    t0 = trace.req_track(0)
+    rec.instant("admit", track=t0, ts=0.1, rid=0, prompt_len=4)
+    rec.span("prefill", 0.1, 0.2, track=t0, rid=0)
+    rec.instant("first_token", track=t0, ts=0.2, rid=0, token=1,
+                policy="w6")
+    rec.span("decode_step", 0.2, 0.3, slots=1)
+    rec.instant("token", track=t0, ts=0.3, rid=0, token=2,
+                policy="w3" if span else "w6")
+    rec.instant("complete", track=t0, ts=0.3, rid=0)
+    rec.instant("policy_swap", ts=0.4, to="w3", from_policy="w6",
+                iteration=5)
+    t1 = trace.req_track(1)
+    rec.instant("admit", track=t1, ts=0.5, rid=1, prompt_len=4)
+    rec.span("prefill", 0.5, 0.6, track=t1, rid=1)
+    rec.instant("first_token", track=t1, ts=0.6, rid=1, token=3,
+                policy=stamp)
+    rec.instant("complete", track=t1, ts=0.6, rid=1)
+    return rec
+
+
+def _swap_stats(**over):
+    base = {"t_decode_s": 0.1, "t_prefill_s": 0.2, "decode_steps": 1,
+            "tokens_generated": 3, "admitted": 2, "completed": 2,
+            "policy_swaps": 1, "active_policy": "w3"}
+    base.update(over)
+    return base
+
+
+def test_reconcile_accepts_clean_swap_epochs():
+    assert trace.reconcile(_swap_trace(), _swap_stats()) == []
+
+
+def test_reconcile_flags_token_stamped_outside_its_epoch():
+    problems = trace.reconcile(_swap_trace(stamp="w6"), _swap_stats())
+    assert any("swap epoch" in p for p in problems)
+
+
+def test_reconcile_flags_request_spanning_variants():
+    problems = trace.reconcile(_swap_trace(span=True), _swap_stats())
+    assert any("span policy variants" in p for p in problems)
+
+
+def test_reconcile_flags_missing_initial_epoch_marker():
+    problems = trace.reconcile(_swap_trace(initial=False), _swap_stats())
+    assert any("initial" in p for p in problems)
+
+
+def test_reconcile_flags_swap_count_and_active_policy_drift():
+    problems = trace.reconcile(_swap_trace(), _swap_stats(policy_swaps=2))
+    assert any("policy_swap events" in p for p in problems)
+    problems = trace.reconcile(_swap_trace(),
+                               _swap_stats(active_policy="w6"))
+    assert any("active_policy" in p for p in problems)
